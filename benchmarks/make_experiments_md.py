@@ -1,0 +1,95 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+JSON records (single source of truth), leaving hand-written sections
+(§Paper, §Perf) intact via marker comments.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import REPO
+
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+MD = os.path.join(REPO, "EXPERIMENTS.md")
+
+BEGIN = "<!-- BEGIN GENERATED:{} -->"
+END = "<!-- END GENERATED:{} -->"
+
+
+def load(tagged: bool):
+    """baseline records have filenames <arch>__<shape>__{pod|multipod};
+    anything with a --tag suffix is a §Perf variant."""
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        is_tagged = len(parts) < 3 or parts[2] not in ("pod", "multipod")
+        with open(f) as fh:
+            r = json.load(fh)
+        r["_file"] = base
+        if is_tagged == tagged:
+            recs.append(r)
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | chips | compile_s | params+temp GB/dev "
+            "| all-gather GB | all-reduce GB | a2a GB | cperm GB |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        m = r["memory_analysis"]
+        w = r["weighted"]["collective_bytes"]
+        gbdev = (m.get("argument_size_in_bytes", 0)
+                 + m.get("temp_size_in_bytes", 0)) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} "
+            f"| {r['compile_s']:.1f} | {gbdev:.1f} "
+            f"| {w['all-gather']/1e9:.2f} | {w['all-reduce']/1e9:.2f} "
+            f"| {w['all-to-all']/1e9:.2f} "
+            f"| {w['collective-permute']/1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs) -> str:
+    rows = ["| arch | shape | mesh | mxu_s | vpu_s | mem_s | coll_s "
+            "| lat_s | dominant | useful | mfu |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rf = r["roofline"]
+        ur = rf.get("useful_ratio")
+        mfu = r.get("mfu_fraction")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['vpu_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| {rf.get('latency_s', 0):.4f} "
+            f"| {rf['dominant']} "
+            f"| {'' if ur is None else f'{ur:.2f}'} "
+            f"| {'' if mfu is None else f'{mfu:.4f}'} |")
+    return "\n".join(rows)
+
+
+def splice(text: str, name: str, content: str) -> str:
+    b, e = BEGIN.format(name), END.format(name)
+    if b in text:
+        pre, rest = text.split(b, 1)
+        _, post = rest.split(e, 1)
+        return pre + b + "\n" + content + "\n" + e + post
+    return text + f"\n{b}\n{content}\n{e}\n"
+
+
+def main():
+    recs = load(tagged=False)
+    text = open(MD).read() if os.path.exists(MD) else "# EXPERIMENTS\n"
+    text = splice(text, "dryrun", dryrun_table(recs))
+    text = splice(text, "roofline", roofline_table(recs))
+    with open(MD, "w") as f:
+        f.write(text)
+    print(f"wrote tables for {len(recs)} records into {MD}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Roofline table: aggregates the dry-run JSON records into the
+EXPERIMENTS.md §Roofline markdown table (all three terms per cell, dominant
+bottleneck, MODEL_FLOPS ratio, per-device memory)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import OUT_DIR, REPO
+
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+
+
+def load_records(mesh: str | None = None, include_tagged: bool = False):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        base = os.path.basename(f)[:-5]
+        parts = base.split("__")
+        tagged = len(parts) < 3 or parts[2] not in ("pod", "multipod")
+        if tagged and not include_tagged:
+            continue                      # §Perf variants, not baselines
+        with open(f) as fh:
+            r = json.load(fh)
+        if mesh is None or r["mesh"] == mesh:
+            recs.append(r)
+    return recs
+
+
+def fmt_row(r) -> str:
+    rf = r["roofline"]
+    mem = r["memory_analysis"]
+    temp = mem.get("temp_size_in_bytes", 0)
+    args = mem.get("argument_size_in_bytes", 0)
+    mfu = r.get("mfu_fraction")
+    ur = rf.get("useful_ratio")
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.4f} | {rf['vpu_s']:.4f} "
+            f"| {rf['memory_s']:.4f} | {rf['collective_s']:.4f} "
+            f"| {rf.get('latency_s', 0):.4f} "
+            f"| {rf['dominant']} "
+            f"| {(args + temp) / 1e9:.1f} "
+            f"| {'' if ur is None else f'{ur:.2f}'} "
+            f"| {'' if mfu is None else f'{mfu:.4f}'} |")
+
+
+HEADER = ("| arch | shape | mesh | mxu_s | vpu_s | memory_s "
+          "| collective_s | latency_s | dominant | GB/dev | useful | mfu |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def run(quick: bool = False):
+    recs = load_records()
+    if not recs:
+        print("no dry-run records found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return None
+    lines = [HEADER] + [fmt_row(r) for r in recs]
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out = os.path.join(OUT_DIR, "roofline_table.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("\n".join(lines))
+    # summary: worst cells
+    scored = [(r.get("mfu_fraction"), r) for r in recs
+              if r.get("mfu_fraction")]
+    if scored:
+        scored.sort(key=lambda t: t[0])
+        print("\nworst roofline fractions:")
+        for v, r in scored[:3]:
+            print(f"  {r['arch']} {r['shape']} {r['mesh']}: mfu={v:.4f} "
+                  f"dominant={r['roofline']['dominant']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

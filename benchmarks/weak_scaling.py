@@ -1,0 +1,45 @@
+"""Weak scaling — the experiment the paper could NOT run (footnote 7: "the
+current implementation cannot perform efficient weak scaling because ...
+the graph file is difficult to generate").
+
+Our generators are procedural, so weak scaling is one loop: hold vertices-
+per-process constant (n = base_n × procs) and measure both engines.  The
+Dijkstra engine's time grows ~linearly with procs at fixed n/proc (n total
+iterations, each a collective round) — the paper's diagnosis again; the
+fixpoint engine stays near-flat until the sweep work dominates.
+"""
+from __future__ import annotations
+
+import re
+
+from benchmarks.common import run_with_devices, write_csv
+
+PROCS = (1, 2, 4, 8)
+
+
+def run(quick: bool = False, base_n: int = 512):
+    base_n = 256 if quick else base_n
+    rows = []
+    for engine in ("dijkstra_sharded", "bellman_sharded"):
+        t1 = None
+        for procs in PROCS:
+            n = base_n * procs
+            out = run_with_devices(
+                "repro.launch.sssp_run",
+                ["--engine", engine, "--procs", str(procs),
+                 "--nodes", str(n), "--edges", str(3 * n),
+                 "--repeats", "2"], procs)
+            t = float(re.search(r"time=([\d.e+-]+)s", out).group(1))
+            t1 = t1 or t
+            eff = t1 / t * 100            # weak-scaling efficiency
+            rows.append([engine, procs, n, f"{t:.6f}", f"{eff:.2f}"])
+            print(f"{engine:18s} procs={procs:2d} n={n:6d} "
+                  f"time={t:.5f}s weak-eff={eff:6.1f}%", flush=True)
+    return write_csv("weak_scaling.csv",
+                     ["engine", "procs", "nodes", "time_s",
+                      "weak_efficiency_pct"], rows)
+
+
+if __name__ == "__main__":
+    import sys
+    run("--quick" in sys.argv)

@@ -1,0 +1,18 @@
+"""Batched serving example: run the serving loop over a queue of requests
+for any assigned architecture (smoke scale on CPU), reporting latency and
+throughput — the decode path here is the exact code lowered by the
+decode_32k / long_500k dry-run cells.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch zamba2-2.7b
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "gemma2-2b"] + argv
+    if "--smoke" not in argv:
+        argv.append("--smoke")
+    main(argv)

@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing: atomic commit, async writer, reshard-on-load.
+
+Format: one ``.npy`` per pytree leaf (path-keyed filenames) plus a JSON
+manifest.  A checkpoint directory is written under a ``tmp.`` prefix and
+atomically ``os.rename``d to ``step_<N>`` only after every leaf and the
+manifest are durably on disk — a killed writer can never leave a directory
+that ``latest_step`` would pick up.
+
+Restore is *elastic*: leaves are loaded as logical (global) arrays and
+``jax.device_put`` with shardings derived from the *current* mesh, so a
+checkpoint written on a 16×16 pod restores onto 2×16×16, a single host, or
+any other mesh (checkpoints store logical arrays, not device layouts).
+
+bfloat16 leaves are stored as a uint16 view (np.save round-trips custom
+ml_dtypes unreliably across versions); real dtypes live in the manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _leaf_name(path) -> str:
+    s = jax.tree_util.keystr(path)
+    return re.sub(r"[^A-Za-z0-9_.-]+", "_", s).strip("_")
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(x)
+    dt = str(arr.dtype)
+    if dt == "bfloat16":
+        return arr.view(np.uint16), "bfloat16"
+    return arr, dt
+
+
+def _from_numpy(arr: np.ndarray, dtype: str) -> np.ndarray:
+    if dtype == "bfloat16":
+        import ml_dtypes
+        return arr.view(ml_dtypes.bfloat16)
+    return arr.astype(dtype) if str(arr.dtype) != dtype else arr
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(ckpt_dir)
+             if (m := _STEP_RE.match(d))]
+    return max(steps) if steps else None
+
+
+def save_checkpoint(ckpt_dir: str, state: Any, step: int,
+                    extra: Optional[dict] = None) -> str:
+    """Synchronous atomic save.  Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp.step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state)
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for path, leaf in leaves:
+        name = _leaf_name(path)
+        arr, dt = _to_numpy(jax.device_get(leaf))
+        np.save(os.path.join(tmp, name + ".npy"), arr)
+        manifest["leaves"].append(
+            {"name": name, "dtype": dt, "shape": list(arr.shape)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)   # atomic commit
+    return final
+
+
+def restore_checkpoint(ckpt_dir: str, state_shape: Any, *,
+                       step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, dict]:
+    """Load the latest (or given) step into the structure of
+    ``state_shape``; ``shardings`` (same pytree) triggers reshard-on-load.
+
+    Returns (state, manifest_extra)."""
+    s = step if step is not None else latest_step(ckpt_dir)
+    if s is None:
+        raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{s}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(state_shape)
+    shard_leaves = (treedef.flatten_up_to(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (path, leaf), shd in zip(leaves, shard_leaves):
+        name = _leaf_name(path)
+        meta = by_name[name]
+        arr = _from_numpy(np.load(os.path.join(d, name + ".npy")), meta["dtype"])
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"shape mismatch for {name}: ckpt {arr.shape} vs "
+                f"expected {leaf.shape}")
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jnp.asarray(arr))
+    return treedef.unflatten(out), manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """Async writer with bounded retention.
+
+    ``save`` snapshots to host memory synchronously (cheap vs training
+    step), then writes on a background thread; ``wait`` joins.  Keeps the
+    newest ``keep`` checkpoints.
+    """
+
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save(self, state: Any, step: int, extra: Optional[dict] = None,
+             block: bool = False):
+        self.wait()
+        host_state = jax.tree.map(jax.device_get, state)
+
+        def _write():
+            try:
+                save_checkpoint(self.ckpt_dir, host_state, step, extra)
+                self._gc()
+            except BaseException as e:     # surfaced on next wait()
+                self.last_error = e
+
+        if block:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for d in os.listdir(self.ckpt_dir)
+            if (m := _STEP_RE.match(d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s}"),
+                          ignore_errors=True)

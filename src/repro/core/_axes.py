@@ -1,0 +1,14 @@
+"""Axis helpers: every sharded SSSP engine accepts a single mesh-axis name
+or a tuple of names (e.g. ("pod", "data", "model") to shard columns over
+all 512 chips in the multi-pod dry-run)."""
+from __future__ import annotations
+
+import math
+
+
+def axis_tuple(axis):
+    return axis if isinstance(axis, tuple) else (axis,)
+
+
+def axis_size(mesh, axis) -> int:
+    return math.prod(mesh.shape[a] for a in axis_tuple(axis))

@@ -1,0 +1,121 @@
+"""Public facade for the SSSP engine — the paper's three implementations
+(plus beyond-paper variants) behind one call.
+
+    from repro.core.api import shortest_paths
+    res = shortest_paths(graph, source=0, engine="serial")
+
+Engines (paper §III):
+    serial            Alg. 1, O(n²) textbook loop               (paper)
+    dijkstra_sharded  Alg. 2, 1-D column-parallel + MINLOC      (paper, MPI)
+    bellman           Alg. 3/4 relax-to-fixpoint, jnp sweep     (paper, CUDA)
+    bellman_kernel    Alg. 3/4 with the Pallas min-plus kernel  (paper, CUDA->TPU)
+    bellman_sharded   fixpoint + 1 all-gather/sweep             (beyond-paper)
+    multisource       batched (S, n) fixpoint                   (beyond-paper)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph as graph_mod
+from repro.core.bellman import sssp_bellman, sssp_bellman_sharded
+from repro.core.multisource import sssp_multisource, sssp_multisource_sharded
+from repro.core.serial import dijkstra_serial
+from repro.core.sharded import dijkstra_sharded
+
+ENGINES = (
+    "serial",
+    "dijkstra_sharded",
+    "bellman",
+    "bellman_kernel",
+    "bellman_sharded",
+    "multisource",
+)
+
+
+@dataclasses.dataclass
+class SsspResult:
+    dist: np.ndarray            # (n,) or (S, n)
+    pred: Optional[np.ndarray]  # (n,) or None (multisource recovers on demand)
+    sweeps: Optional[int]       # fixpoint engines only
+    engine: str
+
+
+def shortest_paths(
+    g: "graph_mod.Graph | jax.Array | np.ndarray",
+    source,
+    *,
+    engine: str = "serial",
+    mesh: Optional[jax.sharding.Mesh] = None,
+    axis: str = "data",
+    block: int = 256,
+    max_sweeps: int | None = None,
+) -> SsspResult:
+    """Run one SSSP engine.  ``source`` is an int (or int array for
+    ``multisource``).  Sharded engines need a ``mesh``; the adjacency is
+    padded to the mesh-axis size automatically (paper §III-B.2)."""
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+
+    if isinstance(g, graph_mod.Graph):
+        n_true, adj_np = g.n, g.adj
+    else:
+        adj_np = np.asarray(g)
+        n_true = adj_np.shape[0]
+        g = graph_mod.Graph(adj=adj_np.astype(np.float32), n=n_true)
+
+    if engine == "serial":
+        d, p = dijkstra_serial(jnp.asarray(g.adj), jnp.int32(source))
+        return SsspResult(np.asarray(d), np.asarray(p), None, engine)
+
+    if engine == "bellman":
+        d, p, s = sssp_bellman(
+            jnp.asarray(g.adj), jnp.int32(source), max_sweeps=max_sweeps
+        )
+        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine)
+
+    if engine == "bellman_kernel":
+        from repro.kernels.sssp_relax.ops import make_sweep_fn
+
+        d, p, s = sssp_bellman(
+            jnp.asarray(g.adj),
+            jnp.int32(source),
+            sweep_fn=make_sweep_fn(block_u=block, block_v=block),
+            max_sweeps=max_sweeps,
+        )
+        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine)
+
+    if engine == "multisource":
+        srcs = jnp.atleast_1d(jnp.asarray(source, jnp.int32))
+        if mesh is not None:
+            gp = g.padded(mesh.shape[axis])
+            D, s = sssp_multisource_sharded(
+                jnp.asarray(gp.adj), srcs, mesh, axis=axis, max_sweeps=max_sweeps
+            )
+            return SsspResult(np.asarray(D)[:, :n_true], None, int(s), engine)
+        D, s = sssp_multisource(jnp.asarray(g.adj), srcs, max_sweeps=max_sweeps)
+        return SsspResult(np.asarray(D), None, int(s), engine)
+
+    # --- sharded engines -------------------------------------------------
+    if mesh is None:
+        raise ValueError(f"engine {engine!r} needs a mesh")
+    gp = g.padded(mesh.shape[axis])
+
+    if engine == "dijkstra_sharded":
+        d, p = dijkstra_sharded(
+            jnp.asarray(gp.adj), source, mesh, axis=axis, n_true=n_true
+        )
+        return SsspResult(
+            np.asarray(d)[:n_true], np.asarray(p)[:n_true], None, engine
+        )
+
+    d, p, s = sssp_bellman_sharded(
+        jnp.asarray(gp.adj), source, mesh, axis=axis, max_sweeps=max_sweeps
+    )
+    return SsspResult(
+        np.asarray(d)[:n_true], np.asarray(p)[:n_true], int(s), engine
+    )

@@ -1,0 +1,143 @@
+"""Graph containers and generators for the SSSP engine.
+
+The paper (§III) takes edge lists as input, materializes them into an
+adjacency matrix (undirected by default, directed with ``-w``), and pads the
+matrix so the vertex count is a multiple of the number of processes
+(§III-B.2, "Calculate Padded Vertices Number").  This module reproduces all
+of that, plus the dense/sparse generators behind the paper's Tables I/II.
+
+Unreachable entries are ``INF`` (the paper's ∞); diagonal is 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Adjacency-matrix graph, the paper's data structure of record.
+
+    adj:      (n, n) float32, INF where no edge, 0 diagonal.
+    n:        true vertex count (before any padding).
+    directed: the paper's ``-w`` flag.
+    """
+
+    adj: np.ndarray
+    n: int
+    directed: bool = False
+
+    @property
+    def num_edges(self) -> int:
+        finite = np.isfinite(self.adj) & (self.adj > 0)
+        cnt = int(finite.sum())
+        return cnt if self.directed else cnt // 2
+
+    def padded(self, multiple: int) -> "Graph":
+        """Pad to the next multiple of ``multiple`` with INF rows/cols.
+
+        Mirrors the paper's padding algorithm: if ``multiple > n`` the padded
+        size is ``multiple``; otherwise round n up to a multiple.  Padding
+        vertices are unreachable (INF everywhere incl. their diagonal-offs),
+        so they never win the argmin and never relax anything.
+        """
+        pn = padded_size(self.n, multiple)
+        if pn == self.n:
+            return self
+        out = np.full((pn, pn), INF, dtype=np.float32)
+        out[: self.n, : self.n] = self.adj
+        # keep a 0 diagonal for padding vertices: harmless (self-distance),
+        # and keeps the matrix a valid min-plus identity-compatible operand.
+        for i in range(self.n, pn):
+            out[i, i] = 0.0
+        return Graph(adj=out, n=self.n, directed=self.directed)
+
+
+def padded_size(n: int, multiple: int) -> int:
+    """The paper's "Calculate Padded Vertices Number" (verbatim logic)."""
+    if multiple > n:
+        return multiple
+    rem = n % multiple
+    return n if rem == 0 else n + (multiple - rem)
+
+
+def from_edge_list(
+    n: int,
+    edges: np.ndarray,
+    weights: np.ndarray,
+    directed: bool = False,
+) -> Graph:
+    """Build the adjacency matrix from an edge list (paper §III).
+
+    edges: (m, 2) int array of (u, v); weights: (m,) float array.
+    Duplicate edges keep the minimum weight (a well-defined choice; the
+    paper does not specify).
+    """
+    adj = np.full((n, n), INF, dtype=np.float32)
+    np.fill_diagonal(adj, 0.0)
+    u, v = edges[:, 0], edges[:, 1]
+    w = weights.astype(np.float32)
+    # np.minimum.at handles duplicates deterministically.
+    np.minimum.at(adj, (u, v), w)
+    if not directed:
+        np.minimum.at(adj, (v, u), w)
+    return Graph(adj=adj, n=n, directed=directed)
+
+
+def random_graph(
+    n: int,
+    m: int,
+    *,
+    seed: int = 0,
+    directed: bool = False,
+    max_weight: float = 100.0,
+    connected: bool = True,
+) -> Graph:
+    """Random weighted graph with ~m edges (paper's test corpus shape).
+
+    ``connected=True`` first threads a random spanning path so every vertex
+    is reachable (the paper's graphs are connected; a disconnected graph
+    would make the Table III timings incomparable).
+    """
+    rng = np.random.default_rng(seed)
+    edges = []
+    if connected and n > 1:
+        perm = rng.permutation(n)
+        path = np.stack([perm[:-1], perm[1:]], axis=1)
+        edges.append(path)
+        m = max(m - (n - 1), 0)
+    if m > 0:
+        u = rng.integers(0, n, size=2 * m + 16)
+        v = rng.integers(0, n, size=2 * m + 16)
+        keep = u != v
+        extra = np.stack([u[keep], v[keep]], axis=1)[:m]
+        edges.append(extra)
+    e = np.concatenate(edges, axis=0) if edges else np.zeros((0, 2), np.int64)
+    w = rng.uniform(1.0, max_weight, size=len(e))
+    return from_edge_list(n, e, w, directed=directed)
+
+
+def dense_graph(n: int, *, seed: int = 0) -> Graph:
+    """Paper Table I: complete-ish graph, m = n(n-1)/2."""
+    return random_graph(n, n * (n - 1) // 2, seed=seed)
+
+
+def sparse_graph(n: int, *, seed: int = 0) -> Graph:
+    """Paper Table II: m = 3n (paper's 1:3 node:edge ratio)."""
+    return random_graph(n, 3 * n, seed=seed)
+
+
+# The paper's exact evaluation corpus (Tables I and II).
+PAPER_DENSE = [(10, 45), (100, 4950), (1000, 499500), (2000, 1899500)]
+PAPER_SPARSE = [
+    (10, 30), (100, 300), (1000, 3000), (2000, 6000),
+    (10000, 30000), (20000, 60000), (40000, 120000),
+]
+
+
+def paper_graph(n: int, m: int, *, seed: int = 0) -> Graph:
+    return random_graph(n, m, seed=seed)

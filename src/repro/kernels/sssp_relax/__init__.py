@@ -1,0 +1,9 @@
+from repro.kernels.sssp_relax.ops import relax_sweep, relax_sweep_multi
+from repro.kernels.sssp_relax.ref import relax_sweep_ref, relax_sweep_multi_ref
+
+__all__ = [
+    "relax_sweep",
+    "relax_sweep_multi",
+    "relax_sweep_ref",
+    "relax_sweep_multi_ref",
+]

@@ -1,0 +1,117 @@
+"""jit'd public wrappers for the sssp_relax Pallas kernels.
+
+Handle INF padding to block-aligned shapes (the same trick the paper uses to
+make n divisible by the process count — §III-B.2), then dispatch to the
+kernel and fold the self-distance ``min(dist, ·)`` back in.
+
+On CPU (this container) ``interpret=True`` executes the kernel body in
+Python; on TPU the same call lowers to Mosaic.  ``auto_interpret()`` picks
+per-backend so library code can stay platform-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sssp_relax import kernel as K
+
+INF = jnp.inf
+
+
+def auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _aligned(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_u", "block_v", "interpret", "frontier_mode")
+)
+def relax_sweep(
+    dist: jax.Array,
+    adj: jax.Array,
+    frontier: jax.Array | None = None,
+    *,
+    block_u: int = 256,
+    block_v: int = 256,
+    interpret: bool | None = None,
+    frontier_mode: bool = False,
+) -> jax.Array:
+    """One relaxation sweep via the Pallas kernel: matches ref.relax_sweep_ref.
+
+    dist (n,), adj (n, n) -> (n,).  Pads internally to the block grid with
+    INF (padding vertices are unreachable, exactly like the paper's padded
+    matrix).  If ``frontier_mode`` a boolean frontier (n,) must be passed and
+    masked rows contribute nothing.
+    """
+    if interpret is None:
+        interpret = auto_interpret()
+    n = adj.shape[0]
+    blk = min(block_u, block_v)
+    np_ = _aligned(n, blk) if n % block_u or n % block_v else n
+    bu, bv = (blk, blk) if np_ != n else (block_u, block_v)
+    d = _pad_to(dist, np_, 0, INF)
+    a = adj
+    if np_ != n:
+        a = _pad_to(_pad_to(adj, np_, 0, INF), np_, 1, INF)
+    if frontier_mode:
+        f = _pad_to(frontier, np_, 0, False)
+        out = K.relax_matvec_frontier(
+            d, f, a, block_u=bu, block_v=bv, interpret=interpret
+        )
+    else:
+        out = K.relax_matvec(d, a, block_u=bu, block_v=bv, interpret=interpret)
+    return jnp.minimum(dist, out[:n])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "block_u", "block_v", "interpret")
+)
+def relax_sweep_multi(
+    D: jax.Array,
+    adj: jax.Array,
+    *,
+    block_s: int = 8,
+    block_u: int = 128,
+    block_v: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Batched sweep: D (s, n), adj (n, n) -> (s, n).  Pads s and n."""
+    if interpret is None:
+        interpret = auto_interpret()
+    s, n = D.shape
+    sp = _aligned(s, block_s)
+    blk = min(block_u, block_v)
+    np_ = _aligned(n, blk) if n % block_u or n % block_v else n
+    bu, bv = (blk, blk) if np_ != n else (block_u, block_v)
+    Dp = _pad_to(_pad_to(D, sp, 0, INF), np_, 1, INF)
+    a = adj
+    if np_ != n:
+        a = _pad_to(_pad_to(adj, np_, 0, INF), np_, 1, INF)
+    out = K.relax_matmul(
+        Dp, a, block_s=block_s, block_u=bu, block_v=bv, interpret=interpret
+    )
+    return jnp.minimum(D, out[:s, :n])
+
+
+def make_sweep_fn(*, block_u: int = 256, block_v: int = 256,
+                  interpret: bool | None = None):
+    """Adapter producing a ``sweep_fn(dist, adj)`` for core.bellman.sssp_bellman."""
+    def fn(dist, adj):
+        return relax_sweep(
+            dist, adj, block_u=block_u, block_v=block_v, interpret=interpret
+        )
+    return fn

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the min-plus relaxation kernels.
+
+These define the semantics the Pallas kernels must reproduce bit-for-bit on
+finite inputs (min-plus is exact in f32: only adds and compares, no rounding
+order ambiguity — min is associative and the adds are elementwise).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def relax_sweep_ref(dist: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """One relaxation sweep. (n,), (n, n) -> (n,).
+
+    new[v] = min(dist[v], min_u(dist[u] + adj[u, v]))
+
+    This is the paper's CUDA kernel (Alg. 4) as a min-plus matvec: every
+    "thread" tid relaxing its row concurrently with atomicMin is, on a
+    machine without atomics, an associative min-reduction over u.
+    """
+    return jnp.minimum(dist, jnp.min(dist[:, None] + adj, axis=0))
+
+
+def relax_sweep_multi_ref(D: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
+    """Batched (multi-source) sweep. (s, n), (n, n) -> (s, n).
+
+    new[s, v] = min(D[s, v], min_u(D[s, u] + adj[u, v]))
+
+    A min-plus *matmul* — the beyond-paper batching that amortizes each
+    adjacency tile load over s sources (see DESIGN.md §2).
+    """
+    return jnp.minimum(D, jnp.min(D[:, :, None] + adj[None, :, :], axis=1))

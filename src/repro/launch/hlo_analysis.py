@@ -1,0 +1,459 @@
+"""Loop-weighted HLO analysis: FLOPs, HBM traffic, collective payloads.
+
+Why not ``compiled.cost_analysis()`` alone: XLA's HloCostAnalysis counts
+each while-loop *body once*, but this framework deliberately keeps HLO
+small by scanning over layers / q-chunks / microbatches — so an unweighted
+count under-reports a 61-layer model by ~61×.  The compiled HLO annotates
+every while op with ``backend_config={"known_trip_count":{"n":...}}``; this
+module parses the module into computations, builds the call graph, and
+propagates costs with while bodies multiplied by their trip counts.
+
+Per-op cost model (applied in the weighted walk):
+  dot                       2 · prod(out dims) · prod(contracting dims) FLOPs
+                            (MXU-eligible)
+  elementwise / compare     prod(out dims) FLOPs (VPU)
+  reduce / reduce-window    prod(input dims) FLOPs (VPU)
+  traffic                   out bytes + Σ operand bytes for every
+                            non-bookkeeping top-level op (fusion internals
+                            excluded — they live in registers/VMEM)
+  collectives               payload = output bytes (all-reduce counted 2×:
+                            ring reduce+broadcast halves)
+
+The VPU/MXU split matters for the paper's SSSP engines: min-plus relaxation
+is *not* an MXU workload (adds+mins, no multiply-accumulate), so its compute
+roofline is the VPU term — a TPU-adaptation insight recorded in DESIGN.md.
+
+Roofline terms (TPU v5e, per chip): 197 TFLOP/s bf16 MXU; 3.9 TFLOP/s f32
+VPU (8×128 lanes × 2 ops × ~940 MHz — derived, not assignment-given);
+819 GB/s HBM; 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 MXU per chip (assignment constant)
+VPU_FLOPS = 3.9e12           # f32 VPU per chip (derived; see module doc)
+HBM_BW = 819e9               # bytes/s per chip (assignment constant)
+ICI_BW = 50e9                # bytes/s per link (assignment constant)
+COLL_LATENCY = 1e-6          # s per collective launch (ICI hop + dispatch);
+                             # captures the paper's n-tiny-allreduce regime
+                             # where payload bytes are negligible but each
+                             # round is a synchronization barrier
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "tanh", "exponential", "log", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "compare", "select", "and", "or", "not", "xor", "clamp", "floor",
+    "ceil", "round-nearest-afz", "cosine", "sine", "atan2", "expm1",
+    "log-plus-one", "logistic",
+}
+
+_BOOKKEEPING = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota",
+}
+
+_SHAPE_TOK = re.compile(r"(\w[\w-]*)\[([\d,]*)\](?:\{[^}]*\})?")
+# computation headers sit at column 0 and may contain nested parens:
+#   %region_0.2 (arg_tuple.1: (s32[], f32[8,512])) -> (s32[], ...) {
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALLED_COMP = re.compile(r"(?:body|calls|to_apply)=%?([\w.-]+)")
+_COND_COMP = re.compile(r"condition=%?([\w.-]+)")
+_TRIP = re.compile(r'known_trip_count[\\"{:n]+(\d+)')
+_OPERAND = re.compile(r"%([\w.-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_SCALAR_SHAPE = re.compile(r"([\w-]+\[[\d,]*\](?:\{[^}]*\})?)")
+_OPCODE = re.compile(r"([\w-]+)\((.*)$")
+
+
+def _matched_paren(s: str) -> int:
+    """Index just past the close paren matching s[0] == '('."""
+    depth = 0
+    for i, ch in enumerate(s):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return i + 1
+    return len(s)
+
+
+def _parse_op_line(line: str):
+    """'%name = TYPE opcode(args), attrs' -> (name, shape, opcode, args, rest).
+
+    Handles tuple-typed outputs containing /*index=N*/ comments and nested
+    layout braces by explicit paren matching instead of a single regex."""
+    ls = line.strip()
+    if ls.startswith("ROOT "):
+        ls = ls[5:]
+    if not ls.startswith("%"):
+        return None
+    name, eq, rest = ls.partition(" = ")
+    if not eq:
+        return None
+    name = name.lstrip("%").strip()
+    rest = rest.lstrip()
+    if rest.startswith("("):                 # tuple-shaped output
+        end = _matched_paren(rest)
+        out_shape, rem = rest[:end], rest[end:].lstrip()
+    else:
+        m = _SCALAR_SHAPE.match(rest)
+        if not m:
+            return None
+        out_shape, rem = m.group(1), rest[m.end():].lstrip()
+    mo = _OPCODE.match(rem)
+    if not mo:
+        return None
+    opcode, tail = mo.group(1), "(" + mo.group(2)
+    end = _matched_paren(tail)
+    args, attrs = tail[1:end - 1], tail[end:]
+    return name, out_shape, opcode, args, attrs
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(
+        (math.prod(int(d) for d in m.group(2).split(",") if d)
+         if m.group(2) else 1) * _DTYPE_BYTES.get(m.group(1), 0)
+        for m in _SHAPE_TOK.finditer(shape_str))
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_TOK.search(shape_str)
+    if not m:
+        return 0
+    return (math.prod(int(d) for d in m.group(2).split(",") if d)
+            if m.group(2) else 1)
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_TOK.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    opcode: str
+    out_shape: str
+    operands: list[str]
+    rest: str
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[_Op]]:
+    comps: dict[str, list[_Op]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        mc = _COMP_START.match(line)
+        if mc:
+            cur = mc.group(1)
+            comps[cur] = []
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(line)
+        if parsed is None:
+            continue
+        name, out_shape, opcode, args, attrs = parsed
+        operands = _OPERAND.findall(args)
+        comps[cur].append(_Op(name, opcode, out_shape, operands,
+                              args + " " + attrs))
+    return comps
+
+
+@dataclasses.dataclass
+class WeightedStats:
+    dot_flops: float = 0.0
+    vector_flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_count: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in COLLECTIVES})
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def add(self, other: "WeightedStats", w: float):
+        self.dot_flops += w * other.dot_flops
+        self.vector_flops += w * other.vector_flops
+        self.traffic_bytes += w * other.traffic_bytes
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += w * other.collective_bytes[k]
+            self.collective_count[k] += int(w * other.collective_count[k])
+
+    def to_dict(self):
+        return {
+            "dot_flops": self.dot_flops,
+            "vector_flops": self.vector_flops,
+            "traffic_bytes": self.traffic_bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+            "total_collective_bytes": self.total_collective_bytes,
+        }
+
+
+def _dot_flops(op: _Op, symtab: dict[str, str]) -> float:
+    out_elems = _shape_elems(op.out_shape)
+    mc = _CONTRACT.search(op.rest)
+    k = 1
+    if mc and op.operands:
+        lhs_shape = symtab.get(op.operands[0], "")
+        dims = _shape_dims(lhs_shape)
+        for idx in (int(i) for i in mc.group(1).split(",") if i):
+            if idx < len(dims):
+                k *= dims[idx]
+    return 2.0 * out_elems * k
+
+
+def weighted_stats(hlo_text: str) -> WeightedStats:
+    comps = parse_computations(hlo_text)
+    memo: dict[str, WeightedStats] = {}
+
+    def comp_stats(cname: str, *, top_level: bool) -> WeightedStats:
+        key = cname + ("#t" if top_level else "#f")
+        if key in memo:
+            return memo[key]
+        st = WeightedStats()
+        memo[key] = st      # guard (acyclic in valid HLO)
+        ops = comps.get(cname, [])
+        symtab = {o.name: o.out_shape for o in ops}
+        defop = {o.name: o.opcode for o in ops}
+        for op in ops:
+            oc = op.opcode
+            if oc in _BOOKKEEPING:
+                continue
+            is_coll = next((c for c in COLLECTIVES
+                            if oc == c or oc == c + "-start"), None)
+            if oc.endswith("-done"):
+                continue
+            if is_coll:
+                payload = _shape_bytes(op.out_shape)
+                if is_coll == "all-reduce":
+                    payload *= 2           # ring: reduce + broadcast halves
+                st.collective_bytes[is_coll] += payload
+                st.collective_count[is_coll] += 1
+                st.traffic_bytes += _shape_bytes(op.out_shape)
+                continue
+            # flops
+            if oc == "dot":
+                st.dot_flops += _dot_flops(op, symtab)
+            elif oc in _ELEMENTWISE:
+                st.vector_flops += _shape_elems(op.out_shape)
+            elif oc in ("reduce", "reduce-window"):
+                ins = sum(_shape_elems(symtab.get(o, ""))
+                          for o in op.operands[:1])
+                st.vector_flops += ins
+            # traffic (top-level ops only; fusion internals live in VMEM).
+            # Fusion-discounted buffer model (XLA:CPU fuses far more finely
+            # than a TPU compiler would, so naive operand+output counting
+            # inflates HBM traffic ~5-10x):
+            #   anchors (dot / reduce / sort / top-k and fusions containing
+            #   them): 2×out (producer write + consumer read) + reads of
+            #   parameter/loop-carried operands (weights inside scan bodies)
+            #   + for reductions the large input read;
+            #   elementwise/convert/copy fusions: 1×out (roughly half of
+            #   these materializations fuse into a neighbor on TPU);
+            #   dynamic-slice/gather: 2×sliced bytes only;
+            #   dynamic-update-slice/scatter: 2×update bytes only (in-place
+            #   KV-cache writes, scan residual stacking).
+            if top_level:
+                out_b = _shape_bytes(op.out_shape)
+                is_dus = (oc in ("dynamic-update-slice", "scatter")
+                          or (oc == "fusion"
+                              and "dynamic-update-slice" in op.name))
+                is_ds = (oc in ("dynamic-slice", "gather", "slice")
+                         or (oc == "fusion" and not is_dus
+                             and ("dynamic-slice" in op.name
+                                  or "gather" in op.name)))
+                is_reduce = (oc in ("reduce", "reduce-window", "sort")
+                             or (oc == "fusion"
+                                 and ("reduce" in op.name
+                                      or "sort" in op.name)))
+                is_anchor = (oc in ("dot", "convolution", "topk",
+                                    "custom-call", "while", "conditional")
+                             or is_reduce
+                             or (oc == "fusion" and "dot" in op.name))
+                if is_ds:
+                    st.traffic_bytes += 2 * out_b
+                elif is_dus:
+                    op_bytes = [_shape_bytes(symtab.get(o, ""))
+                                for o in op.operands]
+                    upd = (sum(op_bytes) - max(op_bytes)
+                           if len(op_bytes) > 1 else out_b)
+                    st.traffic_bytes += 2 * min(max(upd, 1), out_b)
+                elif is_anchor:
+                    param_reads = sum(
+                        _shape_bytes(symtab.get(o, ""))
+                        for o in op.operands
+                        if defop.get(o) in ("parameter",
+                                            "get-tuple-element", "constant"))
+                    big_in = (max((_shape_bytes(symtab.get(o, ""))
+                                   for o in op.operands), default=0)
+                              if is_reduce else 0)
+                    st.traffic_bytes += 2 * out_b + param_reads + big_in
+                else:
+                    st.traffic_bytes += out_b
+            # recurse
+            if oc == "while":
+                body = _CALLED_COMP.search(op.rest)
+                cond = _COND_COMP.search(op.rest)
+                trip = _TRIP.search(op.rest)
+                n = int(trip.group(1)) if trip else 1
+                if body:
+                    st.add(comp_stats(body.group(1), top_level=True), n)
+                if cond:
+                    st.add(comp_stats(cond.group(1), top_level=True), n)
+            elif oc in ("fusion", "call", "conditional"):
+                m = _CALLED_COMP.search(op.rest)
+                if m:
+                    # fusion internals: flops recursed, traffic suppressed
+                    st.add(comp_stats(m.group(1), top_level=False), 1)
+            # reduce/scatter `to_apply` scalar computations: negligible.
+        memo[key] = st
+        return st
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    total = WeightedStats()
+    total.add(comp_stats(entry, top_level=True), 1.0)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    vpu_s: float
+    memory_s: float
+    collective_s: float
+    latency_s: float                # collective count × COLL_LATENCY
+    dot_flops: float
+    vector_flops: float
+    traffic_bytes: float
+    collective_bytes: float
+    collective_count: int
+    model_flops: Optional[float]
+    useful_ratio: Optional[float]   # model_flops / (dot_flops × chips)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "vpu": self.vpu_s,
+                 "memory": self.memory_s, "collective": self.collective_s,
+                 "latency": self.latency_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.vpu_s, self.memory_s,
+                   self.collective_s, self.latency_s)
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of ideal compute-bound time: how close the bound time is
+        to the pure model-FLOPs MXU time (the MFU-like score)."""
+        if not self.model_flops:
+            return None
+        ideal = self.model_flops
+        return ideal / max(self.bound_time_s, 1e-30)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d["dominant"] = self.dominant
+        d["bound_time_s"] = self.bound_time_s
+        return d
+
+
+def roofline(ws: WeightedStats, *, chips: int,
+             model_flops: Optional[float] = None) -> Roofline:
+    """ws: weighted per-device stats.  model_flops: whole-model analytic
+    FLOPs for the step (6·N·D train / 2·N per token decode)."""
+    mf_per_chip = (model_flops / chips) if model_flops else None
+    n_coll = int(sum(ws.collective_count.values()))
+    return Roofline(
+        compute_s=ws.dot_flops / PEAK_FLOPS,
+        vpu_s=ws.vector_flops / VPU_FLOPS,
+        memory_s=ws.traffic_bytes / HBM_BW,
+        collective_s=ws.total_collective_bytes / ICI_BW,
+        latency_s=n_coll * COLL_LATENCY,
+        dot_flops=ws.dot_flops,
+        vector_flops=ws.vector_flops,
+        traffic_bytes=ws.traffic_bytes,
+        collective_bytes=ws.total_collective_bytes,
+        collective_count=n_coll,
+        model_flops=model_flops,
+        useful_ratio=(mf_per_chip / ws.dot_flops
+                      if model_flops and ws.dot_flops else None),
+    )
+
+
+def mfu_fraction(r: Roofline, chips: int) -> Optional[float]:
+    """model_flops / (chips × peak × bound_time): the §Perf score."""
+    if not r.model_flops:
+        return None
+    t = r.bound_time_s
+    if t <= 0:
+        return None
+    return r.model_flops / (chips * PEAK_FLOPS * t)
+
+
+# ---------------------------------------------------------------------------
+# legacy simple interface (kept for tests / quick greps)
+# ---------------------------------------------------------------------------
+
+def collective_stats(hlo_text: str) -> dict:
+    """Unweighted single-pass scan (counts loop bodies once)."""
+    ws = WeightedStats()
+    comps = parse_computations(hlo_text)
+    for ops in comps.values():
+        symtab = {o.name: o.out_shape for o in ops}
+        for op in ops:
+            is_coll = next((c for c in COLLECTIVES
+                            if op.opcode == c or op.opcode == c + "-start"),
+                           None)
+            if is_coll:
+                ws.collective_bytes[is_coll] += _shape_bytes(op.out_shape)
+                ws.collective_count[is_coll] += 1
+    return {"bytes_by_kind": ws.collective_bytes,
+            "count_by_kind": ws.collective_count,
+            "total_bytes": ws.total_collective_bytes}
+
+
+def analytic_train_flops(cfg, tokens: int) -> float:
+    """6·N_active·D (the assignment's MODEL_FLOPS definition)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def analytic_decode_flops(cfg, tokens: int) -> float:
+    """2·N_active per processed token (fwd only: prefill and decode)."""
+    return 2.0 * cfg.active_param_count() * tokens

@@ -1,0 +1,147 @@
+"""ShapeDtypeStruct input stands-ins + shardings for every dry-run cell.
+
+``build_cell(arch, shape_name, mesh)`` returns everything
+``jax.jit(...).lower(...)`` needs for one (architecture × input shape)
+cell: the step callable, argument ShapeDtypeStructs, and in/out shardings
+from the rules engine — with zero device allocation (weak-type-correct
+stand-ins only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config
+from repro.models import transformer as T
+from repro.sharding import rules
+from repro.train.optimizer import OptConfig
+from repro.train.state import train_state_shape
+from repro.train.step import make_train_step
+
+S32 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.int32)
+BF16 = functools.partial(jax.ShapeDtypeStruct, dtype=jnp.bfloat16)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                 # train | prefill | decode
+    step_fn: Callable
+    args: tuple               # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    cfg: Any
+    meta: dict
+
+
+def _modality_specs(cfg, B, S):
+    extras = {}
+    if cfg.num_image_tokens:
+        extras["image_embeds"] = BF16((B, cfg.num_image_tokens, cfg.d_model))
+    if cfg.encoder_segments:
+        extras["encoder_frames"] = BF16(
+            (B, S // cfg.audio_downsample, cfg.d_model))
+    return extras
+
+
+def default_opt_config(cfg) -> OptConfig:
+    # bf16 moments for 1T-class models (see train/optimizer.py docstring)
+    big = cfg.param_count() > 50e9
+    return OptConfig(moment_dtype="bfloat16" if big else "float32")
+
+
+def default_grad_accum(cfg, B: int) -> int:
+    """Microbatching keeps per-device activation memory inside the HBM
+    budget at train_4k's global batch 256 (recorded per cell in §Dry-run)."""
+    if cfg.d_model >= 4096:
+        return 4
+    if cfg.d_model >= 1152:
+        return 2
+    return 1
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               opt_cfg: OptConfig | None = None,
+               grad_accum: int | None = None,
+               cfg_overrides: dict | None = None) -> Cell:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or default_opt_config(cfg)
+        accum = grad_accum or default_grad_accum(cfg, B)
+        state_shape = train_state_shape(cfg, opt_cfg)
+        batch = {"tokens": S32((B, S)), "labels": S32((B, S)),
+                 **_modality_specs(cfg, B, S)}
+        from repro.train.state import TrainState
+        state_sh = TrainState(
+            params=rules.param_shardings(state_shape.params, mesh),
+            opt_state={
+                "mu": rules.param_shardings(state_shape.opt_state["mu"], mesh),
+                "nu": rules.param_shardings(state_shape.opt_state["nu"], mesh),
+                "count": rules.replicated(mesh),
+            },
+            step=rules.replicated(mesh),
+        )
+        batch_sh = rules.batch_shardings(batch, mesh)
+        step = make_train_step(cfg, opt_cfg, grad_accum=accum)
+        return Cell(arch, shape_name, "train", step,
+                    (state_shape, batch), (state_sh, batch_sh),
+                    (state_sh, None), cfg,
+                    {"tokens_per_step": B * S, "grad_accum": accum})
+
+    if shape.kind == "prefill":
+        params_shape = jax.eval_shape(
+            lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+        params_sh = rules.param_shardings(params_shape, mesh)
+        tokens = S32((B, S))
+        extras = _modality_specs(cfg, B, S)
+
+        def prefill_step(params, tokens, **ex):
+            return T.prefill(params, tokens, cfg, max_len=S, **ex)
+
+        args = (params_shape, tokens)
+        in_sh = (params_sh, rules.batch_shardings(tokens, mesh))
+        if extras:
+            # fold extras into a positional dict arg for lowering
+            def prefill_step(params, tokens, extras):  # noqa: F811
+                return T.prefill(params, tokens, cfg, max_len=S, **extras)
+            args = (params_shape, tokens, extras)
+            in_sh = (params_sh, rules.batch_shardings(tokens, mesh),
+                     rules.batch_shardings(extras, mesh))
+        return Cell(arch, shape_name, "prefill", prefill_step, args,
+                    in_sh, None, cfg, {"tokens_per_step": B * S})
+
+    # ---- decode ----
+    params_shape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    params_sh = rules.param_shardings(params_shape, mesh)
+    caches_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, B, S, jnp.bfloat16))
+    caches_sh = rules.cache_shardings(caches_shape, mesh)
+    token, pos = S32((B, 1)), S32((B,))
+    extras = _modality_specs(cfg, B, S)
+    img = extras.get("image_embeds")
+
+    def decode_step(params, token, pos, caches, image_embeds=None):
+        return T.decode_step(params, token, pos, caches, cfg,
+                             image_embeds=image_embeds)
+
+    args = (params_shape, token, pos, caches_shape)
+    in_sh = (params_sh, rules.batch_shardings(token, mesh),
+             rules.batch_shardings(pos, mesh), caches_sh)
+    if img is not None:
+        args = args + (img,)
+        in_sh = in_sh + (rules.batch_shardings(img, mesh),)
+    out_sh = (None, caches_sh, None)
+    return Cell(arch, shape_name, "decode", decode_step, args, in_sh,
+                out_sh, cfg, {"tokens_per_step": B})

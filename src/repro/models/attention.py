@@ -1,0 +1,232 @@
+"""Attention: GQA, RoPE, sliding window, softcap, QK-norm, QKV bias,
+cross-attention, and a KV cache for decode.
+
+Grouped-query attention never materializes repeated KV heads: scores are a
+grouped einsum ``(B,S,KV,G,hd) x (B,T,KV,hd)``, so decode reads each cached
+KV byte exactly once (the decode roofline is KV-cache traffic).
+
+``q_chunk`` bounds training/prefill memory: the query axis is processed in
+``lax.scan`` chunks so the live score tensor is (B, H, q_chunk, T) instead
+of (B, H, S, T) — this is what lets prefill_32k compile inside a 16 GB HBM
+budget (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+from repro.sharding.rules import constrain, tp_size
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, *, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cm.dtype_of(cfg)
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": cm.dense_init(ks[0], (d, H, hd), dt, fan_in=d),
+        "wk": cm.dense_init(ks[1], (d, KV, hd), dt, fan_in=d),
+        "wv": cm.dense_init(ks[2], (d, KV, hd), dt, fan_in=d),
+        "wo": cm.dense_init(ks[3], (H, hd, d), dt, fan_in=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((KV, hd), dt)
+        p["bv"] = jnp.zeros((KV, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dt)
+        p["k_norm"] = jnp.zeros((hd,), dt)
+    if cross:
+        p["gate"] = jnp.zeros((), dt)   # llama3.2-vision tanh gate
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core attend
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, k_pos, k_valid, *, causal, window):
+    """(B, Sq, Tk) additive mask from positions."""
+    qp = q_pos[:, :, None]        # (B, Sq, 1)
+    kp = k_pos[:, None, :]        # (B, 1, Tk)
+    ok = k_valid[:, None, :]
+    if causal:
+        ok = ok & (kp <= qp)
+    if window > 0:
+        ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_block(q, k, v, mask, attn_softcap, scale):
+    """q: (B,Sq,KV,G,hd); k/v: (B,Tk,KV,hd); mask: (B,Sq,Tk) -> (B,Sq,KV,G,hd)."""
+    B, Sq, KV, G, hd = q.shape
+    # §Perf hillclimb (EXPERIMENTS.md): when the KV-head count cannot shard
+    # over the model axis but the full head count can (kimi 8→64 heads on a
+    # 16-way axis), expand K/V to merged heads so scores shard 16-way on
+    # heads — otherwise the scores rule falls back to key-axis sharding
+    # whose *backward* re-gathers f32 score tensors (4.2 TB/step for kimi).
+    tp = tp_size()
+    if Sq > 1 and G > 1 and KV % tp != 0 and (KV * G) % tp == 0:
+        H, Tk = KV * G, k.shape[1]
+        kh = jnp.broadcast_to(k[:, :, :, None, :],
+                              (B, Tk, KV, G, hd)).reshape(B, Tk, H, hd)
+        vh = jnp.broadcast_to(v[:, :, :, None, :],
+                              (B, Tk, KV, G, hd)).reshape(B, Tk, H, hd)
+        qh = q.reshape(B, Sq, H, hd)
+        s = jnp.einsum("bshd,bthd->bhst", qh, kh,
+                       preferred_element_type=jnp.float32) * scale
+        s = constrain(s, "scores_h")
+        if attn_softcap > 0.0:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        s = s + mask[:, None, :, :]
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhst,bthd->bshd", p, vh,
+                         preferred_element_type=jnp.float32).astype(v.dtype)
+        return out.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum(
+        "bskgd,btkd->bkgst", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    s = constrain(s, "scores")
+    if attn_softcap > 0.0:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    s = s + mask[:, None, None, :, :]
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", p, v,
+                      preferred_element_type=jnp.float32).astype(v.dtype)
+
+
+def attend(q, k, v, *, q_pos, k_pos, k_valid, causal, window,
+           attn_softcap=0.0, q_chunk=0):
+    """q: (B,Sq,H,hd); k,v: (B,Tk,KV,hd).  Returns (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, KV, G, hd)
+
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        n_chunk = Sq // q_chunk
+        qs = qg.reshape(B, n_chunk, q_chunk, KV, G, hd)
+        qps = q_pos.reshape(B, n_chunk, q_chunk)
+
+        # checkpoint: scores/probs for a chunk are recomputed in the
+        # backward pass instead of being stacked as scan residuals —
+        # (n_chunk, B, H, cq, S) f32 would dominate training memory
+        # (flash-attention's memory behavior, exact same numerics).
+        @jax.checkpoint
+        def body(_, xs):
+            qc, qpc = xs                       # (B,cq,KV,G,hd), (B,cq)
+            m = _mask(qpc, k_pos, k_valid, causal=causal, window=window)
+            return None, _attend_block(qc, k, v, m, attn_softcap, scale)
+
+        _, outs = lax.scan(body, None,
+                           (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(qps, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, G, hd)
+    else:
+        m = _mask(q_pos, k_pos, k_valid, causal=causal, window=window)
+        out = _attend_block(qg, k, v, m, attn_softcap, scale)
+    return out.reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# full layers
+# ---------------------------------------------------------------------------
+
+def _project_q(p, x, cfg, positions, theta, *, rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"]
+    if cfg.qk_norm:
+        q = cm.rmsnorm_nobias(q, p["q_norm"], cfg.norm_eps)
+    if rope:
+        q = cm.apply_rope(q, positions, theta)
+    return constrain(q, "heads")
+
+
+def _project_kv(p, x, cfg, positions, theta, *, rope=True):
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    if cfg.qk_norm:
+        k = cm.rmsnorm_nobias(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        k = cm.apply_rope(k, positions, theta)
+    return constrain(k, "heads"), constrain(v, "heads")
+
+
+def _out_proj(p, ctx, cfg=None):
+    pet = (ctx.dtype if (cfg is not None and cfg.bf16_partial_reduce)
+           else jnp.float32)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, p["wo"],
+                     preferred_element_type=pet).astype(ctx.dtype)
+    return constrain(out, "hidden")
+
+
+def self_attention(p, x, positions, cfg, *, causal, window, theta,
+                   q_chunk=0):
+    """Full-sequence self-attention (train / prefill).
+
+    Returns (out (B,S,d), (k, v)) — k/v handed back for cache fill.
+    """
+    q = _project_q(p, x, cfg, positions, theta)
+    k, v = _project_kv(p, x, cfg, positions, theta)
+    valid = jnp.ones(positions.shape, jnp.bool_)
+    ctx = attend(q, k, v, q_pos=positions, k_pos=positions, k_valid=valid,
+                 causal=causal, window=window,
+                 attn_softcap=cfg.attn_softcap, q_chunk=q_chunk)
+    return _out_proj(p, ctx, cfg), (k, v)
+
+
+def decode_self_attention(p, x, pos, cache_k, cache_v, cfg, *,
+                          window, theta):
+    """One-token decode.  x: (B,1,d); pos: (B,) write index;
+    cache_k/v: (B,S,KV,hd).  Returns (out, new_cache_k, new_cache_v)."""
+    B, S = cache_k.shape[0], cache_k.shape[1]
+    q = _project_q(p, x, cfg, pos[:, None], theta)
+    k_new, v_new = _project_kv(p, x, cfg, pos[:, None], theta)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, pos].set(k_new[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, pos].set(v_new[:, 0].astype(cache_v.dtype))
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=pos.dtype)[None, :], (B, S))
+    valid = k_pos <= pos[:, None]
+    ctx = attend(q, cache_k, cache_v, q_pos=pos[:, None], k_pos=k_pos,
+                 k_valid=valid, causal=True, window=window,
+                 attn_softcap=cfg.attn_softcap)
+    return _out_proj(p, ctx, cfg), cache_k, cache_v
+
+
+def cross_attention(p, x, positions, ctx_kv, cfg, *, q_chunk=0):
+    """Cross-attention to precomputed context K/V (vision / encoder).
+
+    ctx_kv: (k, v) each (B, T_ctx, KV, hd) — computed once via
+    ``cross_kv``; no RoPE on either side (positionless context).
+    Output is tanh-gated (llama3.2-vision style) when a gate param exists.
+    """
+    q = _project_q(p, x, cfg, positions, theta=1.0, rope=False)
+    k, v = ctx_kv
+    B, T = k.shape[0], k.shape[1]
+    k_pos = jnp.zeros((B, T), positions.dtype)
+    valid = jnp.ones((B, T), jnp.bool_)
+    ctx = attend(q, k, v, q_pos=positions, k_pos=k_pos, k_valid=valid,
+                 causal=False, window=0, attn_softcap=cfg.attn_softcap,
+                 q_chunk=q_chunk)
+    out = _out_proj(p, ctx, cfg)
+    if "gate" in p:
+        out = out * jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype)
+    return out
+
+
+def cross_kv(p, ctx_x, cfg):
+    """Project context embeddings to K/V once (cached across decode steps)."""
+    return _project_kv(p, ctx_x, cfg, positions=None, theta=1.0, rope=False)

@@ -1,0 +1,282 @@
+"""Per-layer blocks, keyed by layer kind (see configs.base for the legend).
+
+Each kind implements three entry points used by the stacked/scanned
+transformer driver:
+
+    init_layer(key, kind, cfg)                     -> params pytree
+    apply_layer_full(p, kind, x, positions, ...)   -> (x, cache_entry, aux)
+    apply_layer_decode(p, kind, x, pos, entry, ...)-> (x, new_cache_entry)
+    init_cache_entry(kind, cfg, batch, max_len)    -> zeroed cache pytree
+
+Cache entries are pytrees with uniform shapes per kind so the driver can
+stack them over scan reps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models.mlp import init_mlp, mlp
+from repro.models.moe import init_moe, moe
+from repro.models.ssm import init_ssm, ssm_decode, ssm_forward
+
+ATTN_KINDS = "GLDE"
+
+
+def _is_moe(kind: str, cfg) -> bool:
+    return cfg.num_experts > 0 and kind in "GL"
+
+
+def _attn_statics(kind: str, cfg):
+    """(causal, window, rope_theta) for an attention layer kind."""
+    causal = kind != "E"
+    window = cfg.sliding_window if kind == "L" else 0
+    theta = (cfg.local_rope_theta if (kind == "L" and cfg.local_rope_theta)
+             else cfg.rope_theta)
+    return causal, window, theta
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, kind: str, cfg):
+    d = cfg.d_model
+    dt = cm.dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    if kind in ATTN_KINDS:
+        p = {
+            "ln1": cm.init_rmsnorm(d, dt),
+            "attn": attn.init_attention(ks[0], cfg),
+            "ln2": cm.init_rmsnorm(d, dt),
+        }
+        p["ffn"] = (init_moe(ks[1], cfg) if _is_moe(kind, cfg)
+                    else init_mlp(ks[1], cfg))
+        if cfg.use_post_norms:
+            p["post_ln1"] = cm.init_rmsnorm(d, dt)
+            p["post_ln2"] = cm.init_rmsnorm(d, dt)
+        return p
+    if kind == "C":      # cross-attention layer (VLM)
+        return {
+            "ln1": cm.init_rmsnorm(d, dt),
+            "xattn": attn.init_attention(ks[0], cfg, cross=True),
+            "ln2": cm.init_rmsnorm(d, dt),
+            "ffn": init_mlp(ks[1], cfg),
+            "gate_ffn": jnp.zeros((), dt),
+        }
+    if kind == "X":      # decoder layer: self + cross (enc-dec)
+        return {
+            "ln1": cm.init_rmsnorm(d, dt),
+            "attn": attn.init_attention(ks[0], cfg),
+            "lnx": cm.init_rmsnorm(d, dt),
+            "xattn": attn.init_attention(ks[1], cfg),
+            "ln2": cm.init_rmsnorm(d, dt),
+            "ffn": init_mlp(ks[2], cfg),
+        }
+    if kind in "MS":     # mamba2 (S: + shared attn block applied after)
+        return {"ln": cm.init_rmsnorm(d, dt), "ssm": init_ssm(ks[0], cfg)}
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def init_shared_block(key, cfg):
+    """Zamba2's weight-shared attention+FFN block (one copy for the model)."""
+    d, dt = cfg.d_model, cm.dtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": cm.init_rmsnorm(d, dt),
+        "attn": attn.init_attention(k1, cfg),
+        "ln2": cm.init_rmsnorm(d, dt),
+        "ffn": init_mlp(k2, cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache entries
+# ---------------------------------------------------------------------------
+
+def init_cache_entry(kind: str, cfg, batch: int, max_len: int, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    kv = lambda: (jnp.zeros((batch, max_len, KV, hd), dtype),
+                  jnp.zeros((batch, max_len, KV, hd), dtype))
+    if kind in "GLD":
+        k, v = kv()
+        return {"k": k, "v": v}
+    if kind == "C":
+        nimg = max(cfg.num_image_tokens, 1)
+        return {"ck": jnp.zeros((batch, nimg, KV, hd), dtype),
+                "cv": jnp.zeros((batch, nimg, KV, hd), dtype)}
+    if kind == "X":
+        k, v = kv()
+        T = max_len // cfg.audio_downsample
+        return {"k": k, "v": v,
+                "ck": jnp.zeros((batch, T, KV, hd), dtype),
+                "cv": jnp.zeros((batch, T, KV, hd), dtype)}
+    if kind in "MS":
+        conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+        e = {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+             "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                                 cfg.ssm_state), jnp.float32)}
+        if kind == "S":
+            k, v = kv()
+            e["sk"], e["sv"] = k, v
+        return e
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _sandwich(p, name, y, cfg):
+    if cfg.use_post_norms:
+        return cm.rmsnorm(y, p[name], cfg.norm_eps)
+    return y
+
+
+def _write_full_kv(entry, k, v, names=("k", "v")):
+    """Fill the cache's first S positions with the prefill K/V."""
+    S = k.shape[1]
+    entry = dict(entry)
+    entry[names[0]] = entry[names[0]].at[:, :S].set(
+        k.astype(entry[names[0]].dtype))
+    entry[names[1]] = entry[names[1]].at[:, :S].set(
+        v.astype(entry[names[1]].dtype))
+    return entry
+
+
+def apply_layer_full(p, kind: str, x, positions, cfg, *,
+                     ctx=None, shared=None, entry=None, q_chunk=0):
+    """Returns (x, cache_entry_or_None, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ATTN_KINDS:
+        causal, window, theta = _attn_statics(kind, cfg)
+        h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, (k, v) = attn.self_attention(
+            p["attn"], h, positions, cfg, causal=causal, window=window,
+            theta=theta, q_chunk=q_chunk)
+        x = x + _sandwich(p, "post_ln1", y, cfg)
+        h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if _is_moe(kind, cfg):
+            y, aux = moe(p["ffn"], h, cfg)
+        else:
+            y = mlp(p["ffn"], h, cfg)
+        x = x + _sandwich(p, "post_ln2", y, cfg)
+        if entry is not None and kind != "E":
+            entry = _write_full_kv(entry, k, v)
+        return x, entry, aux
+
+    if kind == "C":
+        img = ctx["image_embeds"]
+        ck, cv = attn.cross_kv(p["xattn"], img, cfg)
+        h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + attn.cross_attention(p["xattn"], h, positions, (ck, cv), cfg,
+                                     q_chunk=q_chunk)
+        h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        g = jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(x.dtype)
+        x = x + g * mlp(p["ffn"], h, cfg)
+        if entry is not None:
+            entry = dict(entry, ck=ck, cv=cv)
+        return x, entry, aux
+
+    if kind == "X":
+        enc = ctx["encoder_out"]
+        h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, (k, v) = attn.self_attention(
+            p["attn"], h, positions, cfg, causal=True, window=0,
+            theta=cfg.rope_theta, q_chunk=q_chunk)
+        x = x + y
+        ck, cv = attn.cross_kv(p["xattn"], enc, cfg)
+        h = cm.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        x = x + attn.cross_attention(p["xattn"], h, positions, (ck, cv), cfg,
+                                     q_chunk=q_chunk)
+        h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg)
+        if entry is not None:
+            entry = _write_full_kv(entry, k, v)
+            entry = dict(entry, ck=ck, cv=cv)
+        return x, entry, aux
+
+    if kind in "MS":
+        h = cm.rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, (conv_tail, state) = ssm_forward(p["ssm"], h, cfg)
+        x = x + y
+        new_entry = None
+        if entry is not None:
+            new_entry = dict(entry, conv=conv_tail, state=state)
+        if kind == "S":
+            h = cm.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+            y, (k, v) = attn.self_attention(
+                shared["attn"], h, positions, cfg, causal=True, window=0,
+                theta=cfg.rope_theta, q_chunk=q_chunk)
+            x = x + y
+            h = cm.rmsnorm(x, shared["ln2"], cfg.norm_eps)
+            x = x + mlp(shared["ffn"], h, cfg)
+            if entry is not None:
+                new_entry = _write_full_kv(new_entry, k, v, names=("sk", "sv"))
+        return x, new_entry, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+
+def apply_layer_decode(p, kind: str, x, pos, entry, cfg, *,
+                       ctx=None, shared=None):
+    """x: (B, 1, d); pos: (B,).  Returns (x, new_entry)."""
+    if kind in "GLD":
+        _, window, theta = _attn_statics(kind, cfg)
+        h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, ck, cv = attn.decode_self_attention(
+            p["attn"], h, pos, entry["k"], entry["v"], cfg,
+            window=window, theta=theta)
+        x = x + _sandwich(p, "post_ln1", y, cfg)
+        h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        if _is_moe(kind, cfg):
+            y, _ = moe(p["ffn"], h, cfg)
+        else:
+            y = mlp(p["ffn"], h, cfg)
+        x = x + _sandwich(p, "post_ln2", y, cfg)
+        return x, dict(entry, k=ck, v=cv)
+
+    if kind == "C":
+        h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        x = x + attn.cross_attention(p["xattn"], h, pos[:, None],
+                                     (entry["ck"], entry["cv"]), cfg)
+        h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        g = jnp.tanh(p["gate_ffn"].astype(jnp.float32)).astype(x.dtype)
+        x = x + g * mlp(p["ffn"], h, cfg)
+        return x, entry
+
+    if kind == "X":
+        h = cm.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        y, ck_, cv_ = attn.decode_self_attention(
+            p["attn"], h, pos, entry["k"], entry["v"], cfg,
+            window=0, theta=cfg.rope_theta)
+        x = x + y
+        h = cm.rmsnorm(x, p["lnx"], cfg.norm_eps)
+        x = x + attn.cross_attention(p["xattn"], h, pos[:, None],
+                                     (entry["ck"], entry["cv"]), cfg)
+        h = cm.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        x = x + mlp(p["ffn"], h, cfg)
+        return x, dict(entry, k=ck_, v=cv_)
+
+    if kind in "MS":
+        h = cm.rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, conv, state = ssm_decode(p["ssm"], h, cfg,
+                                    entry["conv"], entry["state"])
+        x = x + y
+        new_entry = dict(entry, conv=conv, state=state)
+        if kind == "S":
+            h = cm.rmsnorm(x, shared["ln1"], cfg.norm_eps)
+            y, sk, sv = attn.decode_self_attention(
+                shared["attn"], h, pos, entry["sk"], entry["sv"], cfg,
+                window=0, theta=cfg.rope_theta)
+            x = x + y
+            h = cm.rmsnorm(x, shared["ln2"], cfg.norm_eps)
+            x = x + mlp(shared["ffn"], h, cfg)
+            new_entry = dict(new_entry, sk=sk, sv=sv)
+        return x, new_entry
+    raise ValueError(kind)

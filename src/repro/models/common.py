@@ -1,0 +1,109 @@
+"""Shared model primitives: norms, RoPE, embeddings, init, softcap.
+
+Pure-functional JAX (no flax): params are pytrees of jnp arrays; every module
+is an ``init_*(key, cfg) -> params`` plus an ``apply``-style function.  All
+matmuls run in the model dtype with f32 accumulation via
+``preferred_element_type``; norms and softmax statistics are f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import constrain
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, shape, dtype, fan_in=None):
+    """Truncated-normal with 1/sqrt(fan_in) scale (fan_in = shape[0] default)."""
+    fi = fan_in if fan_in is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fi, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def matmul(x, w, *, prec=None):
+    """x @ w with f32 accumulation regardless of storage dtype."""
+    return jnp.einsum(
+        "...d,df->...f", x, w, preferred_element_type=jnp.float32
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(x, params, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def rmsnorm_nobias(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap <= 0.0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, cfg):
+    return {
+        "tok": dense_init(
+            key, (cfg.vocab_size, cfg.d_model), dtype_of(cfg),
+            fan_in=cfg.d_model,
+        )
+    }
+
+
+def embed(tokens, params, cfg):
+    x = jnp.take(params["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    return constrain(x, "hidden")
+
+
+def unembed(x, embed_params, cfg, lm_head=None):
+    w = lm_head if lm_head is not None else embed_params["tok"].T
+    logits = jnp.einsum(
+        "...d,dv->...v", x, w, preferred_element_type=jnp.float32
+    )
+    return softcap(logits, cfg.logit_softcap)

@@ -1,0 +1,32 @@
+"""Dense FFN: SwiGLU (gate ⊙ up -> down), the FFN used by every assigned arch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.sharding.rules import constrain
+
+
+def init_mlp(key, cfg, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff if d_ff is not None else cfg.d_ff
+    dt = cm.dtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": cm.dense_init(k1, (d, ff), dt),
+        "wi_up": cm.dense_init(k2, (d, ff), dt),
+        "wo": cm.dense_init(k3, (ff, d), dt, fan_in=ff),
+    }
+
+
+def mlp(p, x, cfg=None):
+    g = jnp.einsum("...d,df->...f", x, p["wi_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("...d,df->...f", x, p["wi_up"],
+                   preferred_element_type=jnp.float32)
+    h = constrain((jax.nn.silu(g) * u).astype(x.dtype), "ffh")
+    pet = (x.dtype if (cfg is not None and cfg.bf16_partial_reduce)
+           else jnp.float32)
+    return jnp.einsum("...f,fd->...d", h, p["wo"],
+                      preferred_element_type=pet).astype(x.dtype)

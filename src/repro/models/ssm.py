@@ -1,0 +1,185 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: the sequence is split into
+chunks of ``ssm_chunk``; within a chunk the quadratic (dual) form runs on the
+VPU/MXU, between chunks a sequential state recurrence carries (H, P, N)
+states — O(L·Q) work instead of O(L²), sub-quadratic as required for the
+long_500k cells.  Decode is the pure recurrence: h = dA·h + dt·B⊗x.
+
+Layout follows the reference minimal-SSD: one fused in_proj producing
+[z | x | B | C | dt], causal depthwise conv over [x|B|C], gated RMSNorm
+before out_proj.  Single B/C group (ngroups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import common as cm
+
+
+def init_ssm(key, cfg):
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N
+    dt = cm.dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": cm.dense_init(ks[0], (d, 2 * di + 2 * N + H), dt, fan_in=d),
+        "conv_w": cm.dense_init(ks[1], (cfg.ssm_conv, conv_dim), dt,
+                                fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": cm.dense_init(ks[3], (di, d), dt, fan_in=di),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv1d, kernel k: y[t] = sum_j w[j]*x[t-k+1+j]."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, j:j + xBC.shape[1], :] * w[j] for j in range(k))
+    return jax.nn.silu((y + b).astype(jnp.float32)).astype(xBC.dtype)
+
+
+def _segsum(x):
+    """(..., Q) -> (..., Q, Q): S[i, j] = sum_{j < m <= i} x[m], -inf above diag."""
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    i = jnp.arange(Q)
+    tri = i[:, None] >= i[None, :]
+    return jnp.where(tri, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk):
+    """Chunked SSD scan.
+
+    xh: (B, L, H, P); dt: (B, L, H); A: (H,); Bm, Cm: (B, L, N).
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    Bsz, L, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    dA = dt * A[None, None, :]                                # (B, L, H) <= 0
+    r = lambda t: t.reshape(Bsz, nc, Q, *t.shape[2:])
+    xh, dt, dA, Bm, Cm = r(xh), r(dt), r(dA), r(Bm), r(Cm)
+
+    dAh = jnp.moveaxis(dA, -1, 2)                             # (B, nc, H, Q)
+    Lmat = jnp.exp(_segsum(dAh))                              # (B, nc, H, Q, Q)
+
+    xdt = xh * dt[..., None]                                  # dt-weighted input
+    # intra-chunk (dual quadratic) term
+    scores = jnp.einsum("bcln,bcsn,bchls->bchls", Cm, Bm, Lmat,
+                        preferred_element_type=jnp.float32)
+    Y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # per-chunk output states
+    A_cum = jnp.cumsum(dAh, axis=-1)                          # (B, nc, H, Q)
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)           # (B, nc, H, Q)
+    states = jnp.einsum("bcsn,bchs,bcshp->bchpn", Bm, decay_states, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(A_cum[..., -1])                     # (B, nc, H)
+
+    def scan_fn(h, inp):
+        s, dec = inp                                          # (B,H,P,N),(B,H)
+        h_new = h * dec[:, :, None, None] + s
+        return h_new, h                                       # emit state *before* chunk
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    final, prev_states = lax.scan(
+        scan_fn, h0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (B, nc, H, P, N)
+
+    # inter-chunk contribution
+    state_decay = jnp.exp(A_cum)                              # (B, nc, H, Q)
+    Y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", Cm, prev_states, state_decay,
+                       preferred_element_type=jnp.float32)
+
+    y = (Y_diag + Y_off).reshape(Bsz, L, H, P)
+    return y, final
+
+
+def ssm_forward(p, x, cfg, *, conv_state=None, ssm_state=None):
+    """Full-sequence Mamba2 forward (train / prefill).
+
+    x: (B, L, d).  Returns (y (B, L, d), (conv_state, ssm_state)) with the
+    states at sequence end (for decode continuation).
+    """
+    Bsz, L, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    pet_in = x.dtype if cfg.bf16_partial_reduce else jnp.float32
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"],
+                        preferred_element_type=pet_in).astype(x.dtype)
+    z, xBC_pre, dt_raw = _split_proj(zxbcdt, cfg)
+    xBC = _causal_conv(xBC_pre, p["conv_w"], p["conv_b"])
+    xh = xBC[..., :di].reshape(Bsz, L, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, final_state = ssd_chunked(xh.astype(jnp.float32), dt, A,
+                                 Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, L, di).astype(x.dtype)
+    y = cm.rmsnorm_nobias(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                          p["norm"], cfg.norm_eps)
+    pet = x.dtype if cfg.bf16_partial_reduce else jnp.float32
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"],
+                     preferred_element_type=pet).astype(x.dtype)
+    k = cfg.ssm_conv
+    conv_tail = xBC_pre[:, -(k - 1):]          # pre-conv tail, for decode
+    return out, (conv_tail, final_state.astype(jnp.float32))
+
+
+def ssm_decode(p, x, cfg, conv_state, ssm_state):
+    """One-token recurrence.  x: (B, 1, d); conv_state: (B, k-1, conv_dim);
+    ssm_state: (B, H, P, N).  Returns (y, new_conv_state, new_ssm_state)."""
+    Bsz, _, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xBC_new, dt_raw = _split_proj(zxbcdt, cfg)
+    # roll conv state
+    window = jnp.concatenate([conv_state, xBC_new], axis=1)   # (B, k, conv)
+    w, b = p["conv_w"], p["conv_b"]
+    y_conv = jnp.einsum("bkc,kc->bc", window, w) + b
+    xBC = jax.nn.silu(y_conv.astype(jnp.float32)).astype(x.dtype)
+    xh = xBC[..., :di].reshape(Bsz, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])                             # (B, H)
+    h = ssm_state * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, Bm.astype(jnp.float32), xh.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), h)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = cm.rmsnorm_nobias(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                          p["norm"], cfg.norm_eps)
+    pet = x.dtype if cfg.bf16_partial_reduce else jnp.float32
+    out = jnp.einsum("ble,ed->bld", y, p["out_proj"],
+                     preferred_element_type=pet).astype(x.dtype)
+    return out, window[:, 1:], h

@@ -1,0 +1,276 @@
+"""Stacked-layer LM driver: init / train forward / prefill / decode.
+
+The stack is a list of segments (pattern, n_rep); parameters inside a
+segment are stacked over reps and the pass is a ``lax.scan`` with the
+pattern unrolled inside the body, so HLO is O(pattern length) regardless of
+depth (61-layer Kimi-K2 lowers as one scanned body + one unrolled layer).
+
+One driver covers all six assigned families:
+  dense / moe        decoder-only segments (G/L/D kinds)
+  ssm / hybrid       M/S kinds (+ the Zamba2 weight-shared attention block)
+  vlm                C kinds cross-attending to stub image embeddings
+  audio (enc-dec)    encoder_segments (E) + decoder segments (X)
+
+Caches are nested tuples: caches[seg][pos] = entry pytree with leading
+(n_rep, ...) — carried through decode scans, filled by prefill.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import blocks as B
+from repro.models import common as cm
+from repro.sharding.rules import constrain
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "full": jax.checkpoint_policies.nothing_saveable,
+}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_segment(key, pat: str, n_rep: int, cfg):
+    per_pos = []
+    for i, kind in enumerate(pat):
+        keys = jax.random.split(jax.random.fold_in(key, i), n_rep)
+        stacked = jax.vmap(lambda k, kd=kind: B.init_layer(k, kd, cfg))(keys)
+        per_pos.append(stacked)
+    return tuple(per_pos)
+
+
+def init_params(key, cfg) -> dict:
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": cm.init_embed(ks[0], cfg),
+        "final_ln": cm.init_rmsnorm(cfg.d_model, cm.dtype_of(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = cm.dense_init(
+            ks[1], (cfg.d_model, cfg.vocab_size), cm.dtype_of(cfg))
+    params["segments"] = tuple(
+        _init_segment(jax.random.fold_in(ks[2], i), pat, rep, cfg)
+        for i, (pat, rep) in enumerate(cfg.segments)
+    )
+    if any("S" in pat for pat, _ in cfg.segments):
+        params["shared"] = B.init_shared_block(ks[3], cfg)
+    if cfg.encoder_segments:
+        params["enc_segments"] = tuple(
+            _init_segment(jax.random.fold_in(ks[4], i), pat, rep, cfg)
+            for i, (pat, rep) in enumerate(cfg.encoder_segments)
+        )
+        params["enc_final_ln"] = cm.init_rmsnorm(cfg.d_model, cm.dtype_of(cfg))
+    return params
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    caches = []
+    for pat, n_rep in cfg.segments:
+        seg = []
+        for kind in pat:
+            e = B.init_cache_entry(kind, cfg, batch, max_len, dtype)
+            seg.append(jax.tree.map(
+                lambda a: jnp.zeros((n_rep,) + a.shape, a.dtype), e))
+        caches.append(tuple(seg))
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# stack runners
+# ---------------------------------------------------------------------------
+
+def _auto_q_chunk(S: int) -> int:
+    if S >= 4_096:
+        return 512
+    return 0
+
+
+def _run_stack_full(segments_cfg, seg_params, x, positions, cfg, *,
+                    ctx, shared, caches, q_chunk, remat):
+    """Train (caches=None) or prefill (caches given) pass over all segments."""
+    policy = REMAT_POLICIES.get(remat)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, (pat, n_rep) in enumerate(segments_cfg):
+        p_seg = seg_params[si]
+        c_seg = None if caches is None else caches[si]
+
+        def body(carry, xs, pat=pat):
+            x = carry
+            if caches is None:
+                p_slice, c_slice = xs, [None] * len(pat)
+            else:
+                p_slice, c_slice = xs
+            entries, aux_acc = [], jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(pat):
+                x, entry, aux = B.apply_layer_full(
+                    jax.tree.map(lambda a: a, p_slice[i]), kind, x, positions,
+                    cfg, ctx=ctx, shared=shared, entry=c_slice[i],
+                    q_chunk=q_chunk)
+                entries.append(entry)
+                aux_acc = aux_acc + aux
+            x = constrain(x, "hidden")
+            out = (tuple(entries), aux_acc) if caches is not None else aux_acc
+            return x, out
+
+        if remat != "none":
+            body = jax.checkpoint(body, policy=policy,
+                                  prevent_cse=False, static_argnums=())
+        xs = p_seg if caches is None else (p_seg, c_seg)
+        x, outs = lax.scan(body, x, xs)
+        if caches is None:
+            aux_total = aux_total + jnp.sum(outs)
+        else:
+            entries, auxs = outs
+            new_caches.append(entries)
+            aux_total = aux_total + jnp.sum(auxs)
+    return x, (tuple(new_caches) if caches is not None else None), aux_total
+
+
+def _run_stack_decode(segments_cfg, seg_params, x, pos, caches, cfg, *,
+                      ctx, shared):
+    new_caches = []
+    for si, (pat, n_rep) in enumerate(segments_cfg):
+        p_seg, c_seg = seg_params[si], caches[si]
+
+        def body(carry, xs, pat=pat):
+            x = carry
+            p_slice, c_slice = xs
+            entries = []
+            for i, kind in enumerate(pat):
+                x, entry = B.apply_layer_decode(
+                    p_slice[i], kind, x, pos, c_slice[i], cfg,
+                    ctx=ctx, shared=shared)
+                entries.append(entry)
+            return constrain(x, "hidden"), tuple(entries)
+
+        x, entries = lax.scan(body, x, (p_seg, c_seg))
+        new_caches.append(entries)
+    return x, tuple(new_caches)
+
+
+def _encode(params, frames, cfg):
+    """Run the encoder stack on stub frame embeddings (B, T, d)."""
+    Bsz, T, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (Bsz, T))
+    x, _, _ = _run_stack_full(
+        cfg.encoder_segments, params["enc_segments"], frames, positions, cfg,
+        ctx=None, shared=None, caches=None,
+        q_chunk=_auto_q_chunk(T), remat=cfg.remat)
+    return cm.rmsnorm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+def _build_ctx(params, cfg, image_embeds=None, encoder_frames=None):
+    ctx = {}
+    if image_embeds is not None:
+        ctx["image_embeds"] = image_embeds
+    if encoder_frames is not None:
+        ctx["encoder_out"] = _encode(params, encoder_frames, cfg)
+    return ctx or None
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, tokens, cfg, *, image_embeds=None, encoder_frames=None,
+            caches=None, q_chunk=None):
+    """Full forward.  Returns (hidden (B,S,d), new_caches, aux)."""
+    Bsz, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (Bsz, S))
+    x = cm.embed(tokens, params["embed"], cfg)
+    ctx = _build_ctx(params, cfg, image_embeds, encoder_frames)
+    shared = params.get("shared")
+    qc = _auto_q_chunk(S) if q_chunk is None else q_chunk
+    x, new_caches, aux = _run_stack_full(
+        cfg.segments, params["segments"], x, positions, cfg,
+        ctx=ctx, shared=shared, caches=caches, q_chunk=qc, remat=cfg.remat)
+    x = cm.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def logits_from_hidden(params, x, cfg):
+    return cm.unembed(x, params["embed"], cfg, params.get("lm_head"))
+
+
+def lm_loss(params, x, labels, cfg):
+    """Chunked cross-entropy: logits are materialized loss_chunk tokens at a
+    time so the (B, S, vocab) tensor never exists (vocab 262k × 4k seq would
+    be the single largest buffer in the step — see EXPERIMENTS.md §Perf)."""
+    Bsz, S, d = x.shape
+    chunk = cfg.loss_chunk
+    valid = (labels >= 0)
+    safe_labels = jnp.maximum(labels, 0)
+
+    def ce(xc, lc, vc):
+        logits = logits_from_hidden(params, xc, cfg)          # (B, c, V) f32
+        logits = constrain(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * vc)
+
+    if chunk and S > chunk and S % chunk == 0:
+        nc = S // chunk
+        xs = (jnp.moveaxis(x.reshape(Bsz, nc, chunk, d), 1, 0),
+              jnp.moveaxis(safe_labels.reshape(Bsz, nc, chunk), 1, 0),
+              jnp.moveaxis(valid.reshape(Bsz, nc, chunk), 1, 0))
+
+        # remat: logits chunks are recomputed in the backward pass instead
+        # of being saved as scan residuals (vocab-sized buffers dominate
+        # otherwise — 262k vocab × 512 tokens × f32 per chunk).
+        def body(tot, args):
+            return tot + jax.checkpoint(ce)(*args), None
+
+        total, _ = lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    else:
+        total = ce(x, safe_labels, valid)
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    return total / denom
+
+
+def train_loss(params, batch, cfg):
+    """batch: dict(tokens, labels[, image_embeds, encoder_frames]).
+    Returns (loss, metrics)."""
+    x, _, aux = forward(
+        params, batch["tokens"], cfg,
+        image_embeds=batch.get("image_embeds"),
+        encoder_frames=batch.get("encoder_frames"))
+    loss = lm_loss(params, x, batch["labels"], cfg)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def prefill(params, tokens, cfg, *, max_len: int, image_embeds=None,
+            encoder_frames=None, cache_dtype=jnp.bfloat16):
+    """Fill the KV/state caches for ``tokens`` and return last-token logits.
+
+    Returns (logits (B, vocab), caches, pos (B,))."""
+    Bsz, S = tokens.shape
+    caches = init_cache(cfg, Bsz, max_len, cache_dtype)
+    x, caches, _ = forward(params, tokens, cfg, image_embeds=image_embeds,
+                           encoder_frames=encoder_frames, caches=caches)
+    logits = logits_from_hidden(params, x[:, -1:], cfg)[:, 0]
+    pos = jnp.full((Bsz,), S, jnp.int32)
+    return logits, caches, pos
+
+
+def decode_step(params, token, pos, caches, cfg, *, image_embeds=None):
+    """One serving step: token (B, 1) -> logits (B, vocab), updated caches.
+
+    ``pos`` (B,) is the write index for this token (tokens so far).
+    """
+    x = cm.embed(token, params["embed"], cfg)
+    ctx = {"image_embeds": image_embeds} if image_embeds is not None else None
+    shared = params.get("shared")
+    x, caches = _run_stack_decode(cfg.segments, params["segments"], x, pos,
+                                  caches, cfg, ctx=ctx, shared=shared)
+    x = cm.rmsnorm(x, params["final_ln"], cfg.norm_eps)
+    logits = logits_from_hidden(params, x, cfg)[:, 0]
+    return logits, caches, pos + 1

@@ -1,0 +1,101 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping, weight decay,
+and configurable moment dtype.
+
+Moment dtype matters at the assigned scale: Kimi-K2's ~1.04T params make
+fp32 Adam moments (8.3 TB) untenable on 512 × 16 GB chips; bf16 moments
+halve that and are the default for the 1T-class dry-run cells (recorded in
+EXPERIMENTS.md §Dry-run).  Everything is a pure function over pytrees so
+the whole update stays inside the jitted train step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"     # float32 | bfloat16
+
+
+def schedule(step, cfg: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, cfg: OptConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / scalars."""
+    name = getattr(path[-1], "key", "")
+    return name not in ("scale", "conv_b", "bq", "bk", "bv", "A_log", "D",
+                        "dt_bias", "norm", "gate", "gate_ffn")
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    count = opt_state["count"] + 1
+    lr = schedule(count, cfg)
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(path, p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu_f = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu_f = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        step = (mu_f / c1) / (jnp.sqrt(nu_f / c2) + cfg.eps)
+        if _decay_mask(path):
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), mu_f.astype(mdt), nu_f.astype(mdt)
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_l = treedef.flatten_up_to(grads)
+    mu_l = treedef.flatten_up_to(opt_state["mu"])
+    nu_l = treedef.flatten_up_to(opt_state["nu"])
+    outs = [upd(path, p, g, mu, nu)
+            for (path, p), g, mu, nu in zip(paths_leaves, g_l, mu_l, nu_l)]
+    new_params = treedef.unflatten([o[0] for o in outs])
+    new_mu = treedef.unflatten([o[1] for o in outs])
+    new_nu = treedef.unflatten([o[2] for o in outs])
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    return new_params, new_state, {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,34 @@
+"""Train state pytree + construction helpers (shape-only or materialized)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.train.optimizer import OptConfig, init_opt_state
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(key, cfg, opt_cfg: OptConfig) -> TrainState:
+    params = T.init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt_state=init_opt_state(params, opt_cfg),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def train_state_shape(cfg, opt_cfg: OptConfig):
+    """ShapeDtypeStruct pytree of the state — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg, opt_cfg))

@@ -1,0 +1,19 @@
+# NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here —
+# smoke tests run on the single real CPU device.  Multi-device behavior is
+# covered by subprocess tests (test_integration.py) that set
+# --xla_force_host_platform_device_count in the child environment, and by
+# the dry-run (launch/dryrun.py) which owns its own flag.
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def finite_close(a, b, rtol=1e-5):
+    """allclose treating +inf as a big sentinel (unreachable vertices)."""
+    a = np.where(np.isfinite(a), a, 1e30)
+    b = np.where(np.isfinite(b), b, 1e30)
+    return np.allclose(a, b, rtol=rtol)

@@ -1,0 +1,172 @@
+"""SSSP engine correctness: the paper's three implementations (+ batched
+variant) against an independent numpy Dijkstra oracle, plus property-based
+invariants (hypothesis) on random graphs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from conftest import finite_close
+from repro.core import graph as G
+from repro.core.api import shortest_paths
+from repro.core.bellman import sssp_bellman
+from repro.core.serial import dijkstra_serial, dijkstra_serial_np
+from repro.core.multisource import sssp_multisource
+
+
+# ---------------------------------------------------------------------------
+# oracle agreement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["serial", "bellman", "bellman_kernel",
+                                    "multisource"])
+@pytest.mark.parametrize("n,m", [(10, 30), (10, 45), (100, 300), (100, 4950),
+                                 (257, 1000)])
+def test_engine_matches_oracle(engine, n, m):
+    g = G.random_graph(n, m, seed=n + m)
+    ref, _ = dijkstra_serial_np(g.adj, 0)
+    res = shortest_paths(g, np.array([0]) if engine == "multisource" else 0,
+                         engine=engine)
+    got = res.dist[0] if res.dist.ndim == 2 else res.dist
+    assert finite_close(ref, got)
+
+
+def test_directed_graph():
+    # the paper's -w flag: directed adjacency is asymmetric
+    g = G.random_graph(60, 240, seed=7, directed=True)
+    assert not np.allclose(g.adj, g.adj.T)
+    ref, _ = dijkstra_serial_np(g.adj, 3)
+    res = shortest_paths(g, 3, engine="bellman")
+    assert finite_close(ref, res.dist)
+
+
+def test_disconnected_graph_inf():
+    g = G.random_graph(50, 60, seed=1, connected=False)
+    ref, _ = dijkstra_serial_np(g.adj, 0)
+    res = shortest_paths(g, 0, engine="bellman")
+    assert finite_close(ref, res.dist)
+    # if the oracle found unreachable vertices, we must agree they are inf
+    assert np.array_equal(np.isfinite(ref), np.isfinite(res.dist))
+
+
+def test_multisource_matches_per_source_runs():
+    g = G.random_graph(80, 400, seed=3)
+    srcs = np.array([0, 17, 42, 63], np.int32)
+    res = shortest_paths(g, srcs, engine="multisource")
+    for i, s in enumerate(srcs):
+        ref, _ = dijkstra_serial_np(g.adj, int(s))
+        assert finite_close(ref, res.dist[i])
+
+
+def test_pred_tree_valid():
+    g = G.random_graph(90, 350, seed=11)
+    for engine in ("serial", "bellman"):
+        res = shortest_paths(g, 0, engine=engine)
+        d, p = res.dist, res.pred
+        for v in range(g.n):
+            if v == 0 or not np.isfinite(d[v]):
+                continue
+            u = p[v]
+            assert u >= 0
+            assert np.isclose(d[v], d[u] + g.adj[u, v], rtol=1e-5)
+
+
+def test_bellman_sweep_count_bounded_by_diameter():
+    # path graph: hop diameter n-1 -> n-1 sweeps + 1 to detect fixpoint
+    n = 12
+    edges = np.stack([np.arange(n - 1), np.arange(1, n)], 1)
+    g = G.from_edge_list(n, edges, np.ones(n - 1))
+    res = shortest_paths(g, 0, engine="bellman")
+    assert res.sweeps <= n
+    assert finite_close(res.dist, np.arange(n, dtype=float))
+
+
+def test_frontier_variant_matches():
+    g = G.random_graph(70, 280, seed=5)
+    d0, _, _ = sssp_bellman(jnp.asarray(g.adj), jnp.int32(0))
+    d1, _, _ = sssp_bellman(jnp.asarray(g.adj), jnp.int32(0),
+                            use_frontier=True)
+    assert finite_close(np.asarray(d0), np.asarray(d1))
+
+
+# ---------------------------------------------------------------------------
+# the paper's padding step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,expect", [
+    (4, 3, 6),      # the paper's worked example: 4 nodes, 3 procs -> 6
+    (2, 3, 3),      # procs > n -> padded_n = procs
+    (12, 4, 12),    # already divisible
+    (13, 4, 16),
+])
+def test_padded_size_paper_logic(n, p, expect):
+    assert G.padded_size(n, p) == expect
+
+
+def test_padding_preserves_distances():
+    g = G.random_graph(10, 30, seed=2)
+    gp = g.padded(4)
+    assert gp.adj.shape == (12, 12)
+    ref, _ = dijkstra_serial_np(g.adj, 0)
+    res = shortest_paths(G.Graph(adj=gp.adj, n=12), 0, engine="bellman")
+    assert finite_close(ref, res.dist[:10])
+    # padding vertices unreachable
+    assert not np.isfinite(res.dist[10:]).any()
+
+
+def test_duplicate_edges_keep_minimum():
+    edges = np.array([[0, 1], [0, 1], [1, 2]])
+    w = np.array([5.0, 2.0, 1.0])
+    g = G.from_edge_list(3, edges, w)
+    assert g.adj[0, 1] == 2.0 and g.adj[1, 0] == 2.0
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+
+@st.composite
+def graphs(draw):
+    n = draw(st.integers(3, 40))
+    m = draw(st.integers(0, 3 * n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    directed = draw(st.booleans())
+    return G.random_graph(n, m, seed=seed, directed=directed,
+                          connected=draw(st.booleans()))
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(0, 10**6))
+def test_property_engines_agree(g, s):
+    src = s % g.n
+    ref, _ = dijkstra_serial_np(g.adj, src)
+    for engine in ("serial", "bellman"):
+        res = shortest_paths(g, src, engine=engine)
+        assert finite_close(ref, res.dist), engine
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(0, 10**6))
+def test_property_triangle_inequality_fixpoint(g, s):
+    """At the fixpoint, no edge can relax: d[v] <= d[u] + w(u,v)."""
+    src = s % g.n
+    res = shortest_paths(g, src, engine="bellman")
+    d = np.where(np.isfinite(res.dist), res.dist, 1e30)
+    via = d[:, None] + np.where(np.isfinite(g.adj), g.adj, 1e30)
+    assert (d[None, :] <= via.min(0) + 1e-3).all()
+    assert d[src] == 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs())
+def test_property_monotone_in_edges(g):
+    """Adding an edge can only shorten distances."""
+    ref = shortest_paths(g, 0, engine="bellman").dist
+    adj2 = g.adj.copy()
+    adj2[0, g.n - 1] = adj2[g.n - 1, 0] = 0.5
+    got = shortest_paths(G.Graph(adj=adj2, n=g.n), 0, engine="bellman").dist
+    r = np.where(np.isfinite(ref), ref, 1e30)
+    q = np.where(np.isfinite(got), got, 1e30)
+    assert (q <= r + 1e-3).all()

@@ -1,0 +1,103 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps in interpret mode.
+
+min-plus is exact in floating point (adds + compares only), so the kernel
+must agree with the oracle *bitwise* on f32; bf16 agrees bitwise too (same
+adds at the same precision).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.kernels.sssp_relax import (relax_sweep, relax_sweep_multi,
+                                      relax_sweep_ref, relax_sweep_multi_ref)
+from repro.kernels.sssp_relax.kernel import relax_matvec, relax_matvec_frontier
+
+
+def _dist(n, dtype, seed=0, inf_frac=0.3):
+    rng = np.random.default_rng(seed)
+    d = rng.uniform(0, 50, n).astype(np.float32)
+    d[rng.uniform(size=n) < inf_frac] = np.inf
+    return jnp.asarray(d, dtype)
+
+
+@pytest.mark.parametrize("n", [64, 96, 100, 128, 256, 300, 500])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matvec_sweep_shapes_dtypes(n, dtype):
+    g = G.random_graph(n, 4 * n, seed=n)
+    adj = jnp.asarray(g.adj, dtype)
+    d = _dist(n, dtype, seed=n)
+    ref = relax_sweep_ref(d, adj)
+    out = relax_sweep(d, adj, interpret=True, block_u=128, block_v=128)
+    assert np.array_equal(np.asarray(ref, np.float32),
+                          np.asarray(out, np.float32)), n
+
+
+@pytest.mark.parametrize("block", [64, 128, 256])
+def test_matvec_block_shapes(block):
+    n = 512
+    g = G.random_graph(n, 3 * n, seed=block)
+    d = _dist(n, jnp.float32, seed=1)
+    adj = jnp.asarray(g.adj)
+    ref = relax_sweep_ref(d, adj)
+    out = relax_sweep(d, adj, interpret=True, block_u=block, block_v=block)
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+@pytest.mark.parametrize("s", [1, 3, 8, 9])
+@pytest.mark.parametrize("n", [128, 200])
+def test_matmul_multisource(s, n):
+    g = G.random_graph(n, 5 * n, seed=s * 100 + n)
+    adj = jnp.asarray(g.adj)
+    D = jnp.stack([_dist(n, jnp.float32, seed=i) for i in range(s)])
+    ref = relax_sweep_multi_ref(D, adj)
+    out = relax_sweep_multi(D, adj, interpret=True)
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_frontier_kernel_masks_rows():
+    n = 256
+    g = G.random_graph(n, 3 * n, seed=9)
+    adj = jnp.asarray(g.adj)
+    d = _dist(n, jnp.float32, seed=2, inf_frac=0.0)
+    frontier = jnp.asarray(np.random.default_rng(0).uniform(size=n) < 0.5)
+    out = relax_matvec_frontier(d, frontier, adj, block_u=128, block_v=128,
+                                interpret=True)
+    masked = jnp.where(frontier, d, jnp.inf)
+    ref = jnp.min(masked[:, None] + adj, axis=0)
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_all_inf_dist():
+    n = 128
+    g = G.random_graph(n, 2 * n, seed=4)
+    d = jnp.full((n,), jnp.inf, jnp.float32)
+    out = relax_sweep(d, jnp.asarray(g.adj), interpret=True,
+                      block_u=128, block_v=128)
+    assert not np.isfinite(np.asarray(out)).any()
+
+
+def test_identity_property():
+    """relaxing a fixpoint changes nothing (idempotence at convergence)."""
+    n = 200
+    g = G.random_graph(n, 4 * n, seed=12)
+    from repro.core.serial import dijkstra_serial_np
+    ref, _ = dijkstra_serial_np(g.adj, 0)
+    d = jnp.asarray(ref, jnp.float32)
+    out = relax_sweep(d, jnp.asarray(g.adj), interpret=True,
+                      block_u=128, block_v=128)
+    assert np.allclose(np.where(np.isfinite(ref), ref, 1e30),
+                       np.where(np.isfinite(out), np.asarray(out), 1e30),
+                       rtol=1e-5)
+
+
+def test_unaligned_padding_path():
+    """n not a multiple of any block: internal INF padding must be exact."""
+    n = 137
+    g = G.random_graph(n, 3 * n, seed=6)
+    d = _dist(n, jnp.float32, seed=3)
+    ref = relax_sweep_ref(d, jnp.asarray(g.adj))
+    out = relax_sweep(d, jnp.asarray(g.adj), interpret=True)
+    assert np.array_equal(np.asarray(ref), np.asarray(out))
