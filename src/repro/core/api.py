@@ -5,12 +5,30 @@
     res = shortest_paths(graph, source=0, engine="serial")
 
 Engines (paper §III):
-    serial            Alg. 1, O(n²) textbook loop               (paper)
-    dijkstra_sharded  Alg. 2, 1-D column-parallel + MINLOC      (paper, MPI)
-    bellman           Alg. 3/4 relax-to-fixpoint, jnp sweep     (paper, CUDA)
-    bellman_kernel    Alg. 3/4 with the Pallas min-plus kernel  (paper, CUDA->TPU)
-    bellman_sharded   fixpoint + 1 all-gather/sweep             (beyond-paper)
-    multisource       batched (S, n) fixpoint                   (beyond-paper)
+    serial             Alg. 1, O(n²) textbook loop               (paper)
+    dijkstra_sharded   Alg. 2, 1-D column-parallel + MINLOC      (paper, MPI)
+    bellman            Alg. 3/4 relax-to-fixpoint, jnp sweep     (paper, CUDA)
+    bellman_kernel     Alg. 3/4 with the Pallas min-plus kernel  (paper, CUDA->TPU)
+    bellman_sharded    fixpoint + 1 all-gather/sweep             (beyond-paper)
+    multisource        batched (S, n) fixpoint                   (beyond-paper)
+    bellman_csr        fixpoint, O(m) segment-min sweep on CSR   (beyond-paper)
+    bellman_csr_kernel fixpoint with the Pallas padded-ELL kernel (beyond-paper)
+
+Choosing dense vs CSR (the paper's Table I vs Table II trade-off):
+    The dense engines sweep the n² adjacency matrix per relaxation, so
+    their cost depends on n only — ideal for dense graphs (Table I, m ≈
+    n²/2) where the matrix *is* the edge set.  For sparse graphs (Table II,
+    m = 3n) the matrix is ~n/6 times larger than the edges and the paper's
+    §V flags exactly this as its memory/perf ceiling (40k vertices = 1.6 GB
+    dense).  The ``bellman_csr*`` engines store O(n + m) and do O(m) work
+    per sweep: prefer them whenever m << n², and use a ``CsrGraph``
+    (core/csr.py) directly to skip the dense matrix entirely.  Dense
+    ``Graph`` inputs are auto-converted; ``CsrGraph`` inputs passed to a
+    dense engine are densified (O(n²) — only sensible for small n).
+    Caveat: ``bellman_csr_kernel`` builds the padded-ELL view, which is
+    O(n · max_in_degree) — on heavily skewed graphs (a hub vertex with ~n
+    incoming arcs) that re-approaches O(n²); use ``bellman_csr`` (flat
+    segment-min, strictly O(n + m)) for such degree distributions.
 """
 from __future__ import annotations
 
@@ -21,8 +39,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import csr as csr_mod
 from repro.core import graph as graph_mod
 from repro.core.bellman import sssp_bellman, sssp_bellman_sharded
+from repro.core.bellman_csr import csr_operands, sssp_bellman_csr
 from repro.core.multisource import sssp_multisource, sssp_multisource_sharded
 from repro.core.serial import dijkstra_serial
 from repro.core.sharded import dijkstra_sharded
@@ -34,7 +54,11 @@ ENGINES = (
     "bellman_kernel",
     "bellman_sharded",
     "multisource",
+    "bellman_csr",
+    "bellman_csr_kernel",
 )
+
+CSR_ENGINES = ("bellman_csr", "bellman_csr_kernel")
 
 
 @dataclasses.dataclass
@@ -46,7 +70,7 @@ class SsspResult:
 
 
 def shortest_paths(
-    g: "graph_mod.Graph | jax.Array | np.ndarray",
+    g: "graph_mod.Graph | csr_mod.CsrGraph | jax.Array | np.ndarray",
     source,
     *,
     engine: str = "serial",
@@ -61,12 +85,38 @@ def shortest_paths(
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
 
-    if isinstance(g, graph_mod.Graph):
-        n_true, adj_np = g.n, g.adj
+    if isinstance(g, csr_mod.CsrGraph):
+        cg, n_true = g, g.n
+        if engine not in CSR_ENGINES:
+            # dense engines need the matrix; O(n²), small-n convenience only.
+            g = cg.to_dense()
     else:
-        adj_np = np.asarray(g)
-        n_true = adj_np.shape[0]
-        g = graph_mod.Graph(adj=adj_np.astype(np.float32), n=n_true)
+        if isinstance(g, graph_mod.Graph):
+            n_true = g.n
+        else:
+            adj_np = np.asarray(g)
+            n_true = adj_np.shape[0]
+            g = graph_mod.Graph(adj=adj_np.astype(np.float32), n=n_true)
+        cg = None
+
+    if engine in CSR_ENGINES:
+        if cg is None:
+            cg = g.to_csr()
+        use_kernel = engine == "bellman_csr_kernel"
+        operands = csr_operands(cg, with_ell=use_kernel)
+        sweep_fn = None
+        if use_kernel:
+            from repro.kernels.csr_relax.ops import make_csr_sweep_fn
+
+            sweep_fn = make_csr_sweep_fn(block_v=block)
+        d, p, s = sssp_bellman_csr(
+            operands,
+            jnp.int32(source),
+            n=cg.n,
+            sweep_fn=sweep_fn,
+            max_sweeps=max_sweeps,
+        )
+        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine)
 
     if engine == "serial":
         d, p = dijkstra_serial(jnp.asarray(g.adj), jnp.int32(source))

@@ -114,9 +114,22 @@ def predecessors_from_dist(dist, adj, source):
     v != source, so this reproduces a valid shortest-path tree (the paper
     updates pred inside the kernel; doing it once at the end is equivalent
     at the fixpoint and cheaper — recorded in EXPERIMENTS.md §Perf).
+
+    The diagonal (A[v,v] == 0, i.e. via[v,v] == dist[v]) is masked out:
+    it always ties the fixpoint minimum, and letting the argmin pick it
+    would emit pred[v] == v — a self-loop that breaks path reconstruction.
+
+    The result is a valid tree whenever edge weights are strictly positive
+    (then every pred edge strictly decreases dist, so no cycles).  Known
+    limitation shared with the CSR recovery: explicit zero-weight edges
+    between equal-dist vertices can make two such vertices pick each other
+    (a 2-cycle); orienting zero-weight components needs a multi-pass
+    recovery no single argmin tie-break can express.
     """
     n = adj.shape[0]
     via = dist[:, None] + adj                     # (u, v)
+    diag = jnp.arange(n)
+    via = via.at[diag, diag].set(INF)             # no self-predecessors
     u_best = jnp.argmin(via, axis=0).astype(jnp.int32)
     reached = jnp.isfinite(dist)
     pred = jnp.where(reached, u_best, -1)
@@ -175,8 +188,12 @@ def sssp_bellman_sharded(
 
         it0 = lax.pvary(jnp.int32(0), axis_tuple(axis))
         dist, _, sweeps = lax.while_loop(cond, body, (dist0, prev0, it0))
-        # local pred for owned vertices, from the fixpoint dist.
+        # local pred for owned vertices, from the fixpoint dist.  Mask the
+        # diagonal (global row v for local column v) so the argmin never
+        # emits a pred[v] == v self-loop (same as predecessors_from_dist).
         via = dist[:, None] + adj_loc                            # (n, loc_n)
+        loc_cols = jnp.arange(loc_n, dtype=jnp.int32)
+        via = via.at[v_base + loc_cols, loc_cols].set(INF)
         u_best = jnp.argmin(via, axis=0).astype(jnp.int32)
         mine = lax.dynamic_slice_in_dim(dist, v_base, loc_n)
         owned = v_base + jnp.arange(loc_n, dtype=jnp.int32)

@@ -1,0 +1,205 @@
+"""Sparse CSR graph container — lifting the paper's adjacency-matrix ceiling.
+
+The paper's own §V diagnosis: the dense adjacency matrix burns O(n²) memory
+(Table II's 40,000-vertex graph has only 120k edges but needs a 1.6 GB
+matrix) and the dense relax sweep does O(n²) work per iteration regardless
+of density.  This module stores edges in O(n + m):
+
+* **CSR over incoming edges** (i.e. CSR of the adjacency transpose): every
+  relax engine asks "which u reach v?" — ``new[v] = min(dist[v],
+  min_{(u,w)->v} dist[u] + w)`` — so row v holds v's *incoming* arcs.
+  For undirected graphs both orientations are stored, exactly like the
+  symmetric dense matrix.
+
+* **Padded ELL** (``ell()``): the TPU-friendly fixed-width view, rows padded
+  to a common width K with (index 0, weight INF) sentinels that can never
+  win a min.  This is what the Pallas kernel (kernels/csr_relax) consumes —
+  fixed row width means static block shapes, the same trick the paper's
+  padding plays for its process count (§III-B.2).
+
+This file is deliberately numpy-only (container layer); device-array
+staging lives in core/bellman_csr.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.graph import Graph, INF, random_edge_list
+
+
+@dataclasses.dataclass(frozen=True)
+class CsrGraph:
+    """Incoming-edge CSR graph.
+
+    indptr:  (n+1,) int64 — row v's incoming arcs live in
+             ``[indptr[v], indptr[v+1])``; rows sorted by (dst, src).
+    indices: (nnz,) int32 — source vertex u of each stored arc.
+    weights: (nnz,) float32.
+    n:        vertex count.
+    directed: as in Graph; undirected graphs store both orientations, so
+              ``num_edges == nnz // 2`` there.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    weights: np.ndarray
+    n: int
+    directed: bool = False
+
+    @property
+    def nnz(self) -> int:
+        """Stored arcs (both orientations for undirected graphs)."""
+        return int(self.indices.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        # matches Graph.num_edges (which counts finite adj > 0): zero- or
+        # INF-weight arcs are stored and relaxed but not counted as edges.
+        cnt = int((np.isfinite(self.weights) & (self.weights > 0)).sum())
+        return cnt if self.directed else cnt // 2
+
+    @property
+    def nbytes(self) -> int:
+        return self.indptr.nbytes + self.indices.nbytes + self.weights.nbytes
+
+    def _memo(self, key, build):
+        # derived views are memoized per instance; writing through __dict__
+        # sidesteps the frozen-dataclass __setattr__ (fields stay immutable,
+        # dataclass __eq__ ignores non-field entries).
+        if key not in self.__dict__:
+            self.__dict__[key] = build()
+        return self.__dict__[key]
+
+    def dst_ids(self) -> np.ndarray:
+        """(nnz,) int32 destination id of each stored arc (segment ids for
+        the segment-min relax sweep); ascending by construction.  Memoized."""
+        def build():
+            deg = np.diff(self.indptr)
+            return np.repeat(np.arange(self.n, dtype=np.int32), deg)
+        return self._memo("_dst_ids", build)
+
+    def ell(self, width_multiple: int = 8) -> tuple[np.ndarray, np.ndarray]:
+        """Padded-ELL view: (n, K) int32 indices and (n, K) float32 weights.
+
+        K = max in-degree rounded up to ``width_multiple`` (min one lane
+        group even for edgeless graphs).  Padding slots are (0, INF):
+        ``dist[0] + INF == INF`` never beats a real candidate, the same
+        unreachable-padding argument as the paper's padded matrix.
+        Memoized per width_multiple.
+
+        Note this view is O(n · max_in_degree), not O(n + m): on heavily
+        skewed degree distributions (a hub with ~n incoming arcs) it
+        re-approaches the dense matrix — the flat CSR arrays (and the
+        ``bellman_csr`` engine) stay O(n + m) regardless.
+        """
+        def build():
+            deg = np.diff(self.indptr)
+            max_deg = int(deg.max()) if deg.size else 0
+            K = -(-max(max_deg, 1) // width_multiple) * width_multiple
+            idx = np.zeros((self.n, K), np.int32)
+            w = np.full((self.n, K), INF, np.float32)
+            rows = np.repeat(np.arange(self.n), deg)
+            pos = np.arange(self.nnz) - np.repeat(self.indptr[:-1], deg)
+            idx[rows, pos] = self.indices
+            w[rows, pos] = self.weights
+            return idx, w
+        return self._memo(("_ell", width_multiple), build)
+
+    @classmethod
+    def from_dense(cls, g: Graph) -> "CsrGraph":
+        """Capture every finite off-diagonal entry of ``g.adj`` as an arc.
+
+        Uses the full (possibly padded) matrix dimension as the vertex
+        count, matching how the dense engines treat a padded Graph.
+        """
+        adj = np.asarray(g.adj, np.float32)
+        n = adj.shape[0]
+        mask = np.isfinite(adj)
+        np.fill_diagonal(mask, False)
+        u, v = np.nonzero(mask)
+        order = np.lexsort((u, v))                       # by dst, then src
+        src = u[order].astype(np.int32)
+        dst = v[order]
+        w = adj[u, v][order].astype(np.float32)
+        counts = np.bincount(dst, minlength=n)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        return cls(indptr=indptr, indices=src, weights=w, n=n,
+                   directed=g.directed)
+
+    def to_dense(self) -> Graph:
+        """Materialize the O(n²) matrix (INF off-edges, 0 diagonal).
+        Memoized like the other derived views — repeat dense-engine solves
+        of one CsrGraph reuse the matrix instead of refilling n² entries."""
+        def build():
+            adj = np.full((self.n, self.n), INF, dtype=np.float32)
+            np.fill_diagonal(adj, 0.0)
+            adj[self.indices, self.dst_ids()] = self.weights
+            return Graph(adj=adj, n=self.n, directed=self.directed)
+        return self._memo("_dense", build)
+
+
+def csr_from_edge_list(
+    n: int,
+    edges: np.ndarray,
+    weights: np.ndarray,
+    directed: bool = False,
+) -> CsrGraph:
+    """Build an incoming-edge CSR from an edge list in O(m log m).
+
+    Same semantics as graph.from_edge_list: undirected edges are mirrored,
+    self-loops dropped (the diagonal is implicit), and duplicate arcs keep
+    the minimum weight.
+    """
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    w = np.asarray(weights, np.float32).reshape(-1)
+    if edges.size and (edges.min() < 0 or edges.max() >= n):
+        # fail fast like the dense sibling's fancy-indexing would; the
+        # (dst, src) -> dst*n+src packing below would otherwise silently
+        # alias out-of-range ids onto valid arcs.
+        raise IndexError(
+            f"edge endpoints must be in [0, {n}); got "
+            f"[{edges.min()}, {edges.max()}]"
+        )
+    u, v = edges[:, 0], edges[:, 1]
+    if not directed:
+        u, v = np.concatenate([u, v]), np.concatenate([v, u])
+        w = np.concatenate([w, w])
+    keep = u != v
+    u, v, w = u[keep], v[keep], w[keep]
+    # dedupe (dst, src) pairs keeping the min weight, sorted by (dst, src).
+    key = v * np.int64(n) + u
+    uniq, inv = np.unique(key, return_inverse=True)
+    wmin = np.full(uniq.shape[0], INF, np.float32)
+    np.minimum.at(wmin, inv, w)
+    dst = (uniq // n).astype(np.int64)
+    src = (uniq % n).astype(np.int32)
+    counts = np.bincount(dst, minlength=n)
+    indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+    return CsrGraph(indptr=indptr, indices=src, weights=wmin, n=n,
+                    directed=directed)
+
+
+def random_csr_graph(
+    n: int,
+    m: int,
+    *,
+    seed: int = 0,
+    directed: bool = False,
+    max_weight: float = 100.0,
+    connected: bool = True,
+) -> CsrGraph:
+    """CSR-native random graph — same RNG stream as graph.random_graph, so
+    equal seeds yield the identical graph in either representation, without
+    ever allocating the dense matrix."""
+    e, w = random_edge_list(
+        n, m, seed=seed, max_weight=max_weight, connected=connected
+    )
+    return csr_from_edge_list(n, e, w, directed=directed)
+
+
+def sparse_csr_graph(n: int, *, seed: int = 0) -> CsrGraph:
+    """Paper Table II corpus shape (m = 3n) in O(n) memory — usable far
+    beyond the dense generator's n≈40k ceiling."""
+    return random_csr_graph(n, 3 * n, seed=seed)

@@ -25,6 +25,11 @@ class Graph:
     adj:      (n, n) float32, INF where no edge, 0 diagonal.
     n:        true vertex count (before any padding).
     directed: the paper's ``-w`` flag.
+
+    Treat instances as immutable: the dataclass is frozen and derived
+    views (``to_csr()`` here, ``ell()``/``to_dense()`` on CsrGraph) are
+    memoized per instance, so mutating ``adj`` in place after use would
+    leave engines reading stale caches.  Build a new Graph instead.
     """
 
     adj: np.ndarray
@@ -36,6 +41,25 @@ class Graph:
         finite = np.isfinite(self.adj) & (self.adj > 0)
         cnt = int(finite.sum())
         return cnt if self.directed else cnt // 2
+
+    def to_csr(self) -> "CsrGraph":
+        """Convert to the sparse CSR container (core/csr.py).
+
+        Captures every finite off-diagonal entry of ``adj`` as an arc; the
+        0 diagonal is implicit in CSR relaxation (``min(dist[v], ·)``), so
+        round-tripping through ``CsrGraph.to_dense()`` reproduces ``adj``
+        exactly for any matrix built by ``from_edge_list``.
+
+        Memoized per instance (the O(n²) scan would otherwise repeat on
+        every CSR-engine solve of a dense Graph); writes through __dict__
+        to sidestep the frozen-dataclass __setattr__, like CsrGraph's
+        derived-view caches.
+        """
+        if "_csr" not in self.__dict__:
+            from repro.core import csr as _csr
+
+            self.__dict__["_csr"] = _csr.CsrGraph.from_dense(self)
+        return self.__dict__["_csr"]
 
     def padded(self, multiple: int) -> "Graph":
         """Pad to the next multiple of ``multiple`` with INF rows/cols.
@@ -75,8 +99,15 @@ def from_edge_list(
 
     edges: (m, 2) int array of (u, v); weights: (m,) float array.
     Duplicate edges keep the minimum weight (a well-defined choice; the
-    paper does not specify).
+    paper does not specify).  Out-of-range vertex ids (including negative
+    ones, which numpy indexing would silently wrap) fail fast.
     """
+    edges = np.asarray(edges, np.int64).reshape(-1, 2)
+    if edges.size and (edges.min() < 0 or edges.max() >= n):
+        raise IndexError(
+            f"edge endpoints must be in [0, {n}); got "
+            f"[{edges.min()}, {edges.max()}]"
+        )
     adj = np.full((n, n), INF, dtype=np.float32)
     np.fill_diagonal(adj, 0.0)
     u, v = edges[:, 0], edges[:, 1]
@@ -88,20 +119,21 @@ def from_edge_list(
     return Graph(adj=adj, n=n, directed=directed)
 
 
-def random_graph(
+def random_edge_list(
     n: int,
     m: int,
     *,
     seed: int = 0,
-    directed: bool = False,
     max_weight: float = 100.0,
     connected: bool = True,
-) -> Graph:
-    """Random weighted graph with ~m edges (paper's test corpus shape).
+) -> tuple[np.ndarray, np.ndarray]:
+    """Random edge list with ~m edges (paper's test corpus shape).
 
     ``connected=True`` first threads a random spanning path so every vertex
     is reachable (the paper's graphs are connected; a disconnected graph
-    would make the Table III timings incomparable).
+    would make the Table III timings incomparable).  Shared by the dense
+    (``random_graph``) and sparse (``csr.random_csr_graph``) generators so
+    the same seed yields the same graph in either representation.
     """
     rng = np.random.default_rng(seed)
     edges = []
@@ -118,7 +150,37 @@ def random_graph(
         edges.append(extra)
     e = np.concatenate(edges, axis=0) if edges else np.zeros((0, 2), np.int64)
     w = rng.uniform(1.0, max_weight, size=len(e))
+    return e, w
+
+
+def random_graph(
+    n: int,
+    m: int,
+    *,
+    seed: int = 0,
+    directed: bool = False,
+    max_weight: float = 100.0,
+    connected: bool = True,
+) -> Graph:
+    """Random weighted dense-adjacency graph with ~m edges."""
+    e, w = random_edge_list(
+        n, m, seed=seed, max_weight=max_weight, connected=connected
+    )
     return from_edge_list(n, e, w, directed=directed)
+
+
+def csr_from_edge_list(
+    n: int,
+    edges: np.ndarray,
+    weights: np.ndarray,
+    directed: bool = False,
+) -> "CsrGraph":
+    """Sparse sibling of :func:`from_edge_list` — same edge semantics
+    (undirected mirroring, duplicate edges keep the minimum weight) into a
+    ``CsrGraph`` without ever materializing the O(n²) matrix."""
+    from repro.core import csr as _csr
+
+    return _csr.csr_from_edge_list(n, edges, weights, directed=directed)
 
 
 def dense_graph(n: int, *, seed: int = 0) -> Graph:

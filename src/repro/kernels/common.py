@@ -1,0 +1,25 @@
+"""Helpers shared by the kernel packages: backend dispatch and INF padding
+to block-aligned shapes (the paper's §III-B.2 padding trick, applied to
+kernel grids instead of process counts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def auto_interpret() -> bool:
+    """Interpret the Pallas body in Python everywhere but real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def aligned(n: int, block: int) -> int:
+    return ((n + block - 1) // block) * block
+
+
+def pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)

@@ -1,0 +1,9 @@
+from repro.kernels.csr_relax.ops import csr_relax_sweep, make_csr_sweep_fn
+from repro.kernels.csr_relax.ref import ell_relax_ref, segment_relax_ref
+
+__all__ = [
+    "csr_relax_sweep",
+    "make_csr_sweep_fn",
+    "ell_relax_ref",
+    "segment_relax_ref",
+]

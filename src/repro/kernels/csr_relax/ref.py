@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the sparse (CSR/ELL) relaxation kernel.
+
+Min-plus over an explicit edge list is exact in f32 (adds + compares only),
+so the Pallas ELL kernel must agree with these *bitwise* — and both must
+agree with the dense oracle (kernels/sssp_relax/ref.py) on the matching
+matrix, since they enumerate the same candidate set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_relax_ref(dist: jnp.ndarray, ell_idx: jnp.ndarray,
+                  ell_w: jnp.ndarray) -> jnp.ndarray:
+    """One sweep over padded-ELL rows. (n,), (n, K), (n, K) -> (n,).
+
+    new[v] = min(dist[v], min_k dist[ell_idx[v, k]] + ell_w[v, k])
+
+    Padding slots are (0, INF): dist[0] + INF == INF never wins.
+    """
+    cand = jnp.min(dist[ell_idx] + ell_w, axis=1)
+    return jnp.minimum(dist, cand)
+
+
+def segment_relax_ref(dist: jnp.ndarray, src_ids: jnp.ndarray,
+                      dst_ids: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """One sweep as a segment-min over flat CSR arcs (the engine's O(m)
+    formulation); identical candidate set as the ELL view."""
+    via = dist[src_ids] + weights
+    cand = jax.ops.segment_min(via, dst_ids, num_segments=dist.shape[0])
+    return jnp.minimum(dist, cand)

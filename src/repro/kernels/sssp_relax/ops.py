@@ -15,26 +15,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import aligned as _aligned
+from repro.kernels.common import auto_interpret
+from repro.kernels.common import pad_to as _pad_to
 from repro.kernels.sssp_relax import kernel as K
 
 INF = jnp.inf
-
-
-def auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
-    pad = size - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=fill)
-
-
-def _aligned(n: int, block: int) -> int:
-    return ((n + block - 1) // block) * block
 
 
 @functools.partial(
@@ -107,9 +93,15 @@ def relax_sweep_multi(
     return jnp.minimum(D, out[:s, :n])
 
 
+@functools.lru_cache(maxsize=None)
 def make_sweep_fn(*, block_u: int = 256, block_v: int = 256,
                   interpret: bool | None = None):
-    """Adapter producing a ``sweep_fn(dist, adj)`` for core.bellman.sssp_bellman."""
+    """Adapter producing a ``sweep_fn(dist, adj)`` for core.bellman.sssp_bellman.
+
+    Memoized so repeated calls return the *same* closure: ``sweep_fn`` is a
+    static jit argument of the engine, and a fresh closure per call would
+    retrace + recompile the whole fixpoint loop every solve.
+    """
     def fn(dist, adj):
         return relax_sweep(
             dist, adj, block_u=block_u, block_v=block_v, interpret=interpret

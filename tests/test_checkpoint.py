@@ -6,6 +6,8 @@ import shutil
 import numpy as np
 import pytest
 
+from conftest import requires_modern_jax_sharding
+
 import jax
 import jax.numpy as jnp
 
@@ -69,6 +71,7 @@ def test_shape_mismatch_raises(tmp_path):
         restore_checkpoint(str(tmp_path), bad)
 
 
+@requires_modern_jax_sharding
 def test_restore_with_shardings(tmp_path):
     """Reshard-on-load: restore with explicit NamedShardings."""
     from repro.sharding import rules

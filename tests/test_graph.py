@@ -1,0 +1,91 @@
+"""graph.py container edge cases: duplicate-edge resolution, padded_size
+boundaries, and the invariant that padding vertices never affect results."""
+import numpy as np
+import pytest
+
+from conftest import dijkstra_oracle, finite_close
+from repro.core import graph as G
+from repro.core.api import shortest_paths
+
+
+# ---------------------------------------------------------------------------
+# duplicate-edge min-weight resolution in from_edge_list
+# ---------------------------------------------------------------------------
+
+def test_duplicate_edges_undirected_min_across_orientations():
+    """(u,v) and (v,u) duplicates with conflicting weights resolve to one
+    symmetric minimum."""
+    edges = np.array([[0, 1], [1, 0], [0, 1]])
+    w = np.array([5.0, 2.0, 7.0])
+    g = G.from_edge_list(3, edges, w)
+    assert g.adj[0, 1] == 2.0 and g.adj[1, 0] == 2.0
+
+
+def test_duplicate_edges_directed_kept_per_orientation():
+    edges = np.array([[0, 1], [0, 1], [1, 0]])
+    w = np.array([5.0, 2.0, 9.0])
+    g = G.from_edge_list(3, edges, w, directed=True)
+    assert g.adj[0, 1] == 2.0
+    assert g.adj[1, 0] == 9.0
+
+
+def test_duplicate_edges_csr_matches_dense():
+    rng = np.random.default_rng(0)
+    edges = rng.integers(0, 20, size=(200, 2))
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    w = rng.uniform(1, 50, size=len(edges))
+    for directed in (False, True):
+        dense = G.from_edge_list(20, edges, w, directed=directed)
+        sparse = G.csr_from_edge_list(20, edges, w, directed=directed)
+        assert np.array_equal(sparse.to_dense().adj, dense.adj)
+
+
+# ---------------------------------------------------------------------------
+# padded_size boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,multiple,expect", [
+    (2, 3, 3),        # multiple > n -> padded size is the multiple
+    (1, 8, 8),
+    (12, 4, 12),      # exact multiple -> unchanged
+    (4, 4, 4),
+    (5, 1, 5),        # multiple == 1 is a no-op
+    (13, 4, 16),
+    (999, 1000, 1000),
+])
+def test_padded_size_boundaries(n, multiple, expect):
+    assert G.padded_size(n, multiple) == expect
+
+
+def test_padded_noop_returns_same_object():
+    g = G.random_graph(12, 24, seed=0)
+    assert g.padded(4) is g
+
+
+def test_padded_keeps_true_n_and_edge_count():
+    g = G.random_graph(10, 30, seed=1)
+    gp = g.padded(8)
+    assert gp.adj.shape == (16, 16)
+    assert gp.n == g.n
+    assert gp.num_edges == g.num_edges
+
+
+# ---------------------------------------------------------------------------
+# padding vertices never affect results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["serial", "bellman", "bellman_csr"])
+@pytest.mark.parametrize("multiple", [3, 7, 32])
+def test_padding_inert_across_engines(engine, multiple):
+    g = G.random_graph(20, 60, seed=multiple)
+    gp = g.padded(multiple)
+    pn = gp.adj.shape[0]
+    ref = dijkstra_oracle(g, 0)
+    res = shortest_paths(G.Graph(adj=gp.adj, n=pn), 0, engine=engine)
+    assert finite_close(ref, res.dist[: g.n])
+    # padding vertices are unreachable from real ones...
+    assert not np.isfinite(res.dist[g.n:]).any()
+    # ...and a source *in* the padding reaches only itself.
+    res = shortest_paths(G.Graph(adj=gp.adj, n=pn), pn - 1, engine=engine)
+    assert res.dist[pn - 1] == 0.0
+    assert not np.isfinite(np.delete(res.dist, pn - 1)).any()

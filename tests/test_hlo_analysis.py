@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+from conftest import requires_modern_jax_sharding
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -96,6 +98,7 @@ def test_roofline_terms_and_dominant():
         (H.PEAK_FLOPS * 2) / (4 * H.PEAK_FLOPS * 2.0))
 
 
+@requires_modern_jax_sharding
 def test_collectives_counted_in_spmd_module():
     """A psum inside shard_map lowers to all-reduce ops we must count."""
     import functools

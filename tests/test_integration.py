@@ -13,6 +13,8 @@ import sys
 import numpy as np
 import pytest
 
+from conftest import requires_modern_jax_sharding
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
@@ -33,6 +35,7 @@ def _run(code=None, module=None, args=(), devices=1, env=None, timeout=600):
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_sharded_engines_multidevice_match_oracle():
     code = """
 import jax, numpy as np, jax.numpy as jnp
@@ -58,6 +61,7 @@ print("MULTIDEVICE_OK")
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_minloc_variants_agree_multidevice():
     code = """
 import jax, numpy as np, jax.numpy as jnp
@@ -79,6 +83,7 @@ print("MINLOC_OK")
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_failure_injection_restart_is_bit_identical(tmp_path):
     """Train 20 steps clean; train with a crash at step 12 + restart; the
     post-restart losses must match the uninterrupted run exactly."""
@@ -107,6 +112,7 @@ def test_failure_injection_restart_is_bit_identical(tmp_path):
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_ddp_compressed_trainer_multidevice():
     code = """
 import jax, jax.numpy as jnp
@@ -145,6 +151,7 @@ def test_serve_driver_runs():
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_sssp_run_driver_scaling_procs():
     r = _run(module="repro.launch.sssp_run",
              args=["--engine", "dijkstra_sharded", "--procs", "4",
@@ -155,6 +162,7 @@ def test_sssp_run_driver_scaling_procs():
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_elastic_restore_across_meshes(tmp_path):
     """Checkpoint on 1 device, restore on an 8-device mesh (reshard-on-load)."""
     ck = str(tmp_path / "ck")
@@ -173,6 +181,7 @@ def test_elastic_restore_across_meshes(tmp_path):
 
 
 @pytest.mark.slow
+@requires_modern_jax_sharding
 def test_moe_ep_shard_map_matches_gspmd():
     """The explicit expert-parallel shard_map MoE must produce the same
     outputs as the GSPMD grouped path (same routing, same capacity

@@ -1,9 +1,17 @@
 """SSSP engine correctness: the paper's three implementations (+ batched
 variant) against an independent numpy Dijkstra oracle, plus property-based
-invariants (hypothesis) on random graphs."""
+invariants (hypothesis) on random graphs.
+
+``hypothesis`` is optional: without it the property tests are skipped but
+everything else still collects and runs (the tier-1 gate)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 import jax
 import jax.numpy as jnp
@@ -124,49 +132,52 @@ def test_duplicate_edges_keep_minimum():
 
 
 # ---------------------------------------------------------------------------
-# property-based invariants
+# property-based invariants (skipped when hypothesis is not installed)
 # ---------------------------------------------------------------------------
 
-@st.composite
-def graphs(draw):
-    n = draw(st.integers(3, 40))
-    m = draw(st.integers(0, 3 * n))
-    seed = draw(st.integers(0, 2**31 - 1))
-    directed = draw(st.booleans())
-    return G.random_graph(n, m, seed=seed, directed=directed,
-                          connected=draw(st.booleans()))
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def graphs(draw):
+        n = draw(st.integers(3, 40))
+        m = draw(st.integers(0, 3 * n))
+        seed = draw(st.integers(0, 2**31 - 1))
+        directed = draw(st.booleans())
+        return G.random_graph(n, m, seed=seed, directed=directed,
+                              connected=draw(st.booleans()))
 
+    @settings(max_examples=25, deadline=None)
+    @given(graphs(), st.integers(0, 10**6))
+    def test_property_engines_agree(g, s):
+        src = s % g.n
+        ref, _ = dijkstra_serial_np(g.adj, src)
+        for engine in ("serial", "bellman", "bellman_csr"):
+            res = shortest_paths(g, src, engine=engine)
+            assert finite_close(ref, res.dist), engine
 
-@settings(max_examples=25, deadline=None)
-@given(graphs(), st.integers(0, 10**6))
-def test_property_engines_agree(g, s):
-    src = s % g.n
-    ref, _ = dijkstra_serial_np(g.adj, src)
-    for engine in ("serial", "bellman"):
-        res = shortest_paths(g, src, engine=engine)
-        assert finite_close(ref, res.dist), engine
+    @settings(max_examples=25, deadline=None)
+    @given(graphs(), st.integers(0, 10**6))
+    def test_property_triangle_inequality_fixpoint(g, s):
+        """At the fixpoint, no edge can relax: d[v] <= d[u] + w(u,v)."""
+        src = s % g.n
+        res = shortest_paths(g, src, engine="bellman")
+        d = np.where(np.isfinite(res.dist), res.dist, 1e30)
+        via = d[:, None] + np.where(np.isfinite(g.adj), g.adj, 1e30)
+        assert (d[None, :] <= via.min(0) + 1e-3).all()
+        assert d[src] == 0.0
 
-
-@settings(max_examples=25, deadline=None)
-@given(graphs(), st.integers(0, 10**6))
-def test_property_triangle_inequality_fixpoint(g, s):
-    """At the fixpoint, no edge can relax: d[v] <= d[u] + w(u,v)."""
-    src = s % g.n
-    res = shortest_paths(g, src, engine="bellman")
-    d = np.where(np.isfinite(res.dist), res.dist, 1e30)
-    via = d[:, None] + np.where(np.isfinite(g.adj), g.adj, 1e30)
-    assert (d[None, :] <= via.min(0) + 1e-3).all()
-    assert d[src] == 0.0
-
-
-@settings(max_examples=15, deadline=None)
-@given(graphs())
-def test_property_monotone_in_edges(g):
-    """Adding an edge can only shorten distances."""
-    ref = shortest_paths(g, 0, engine="bellman").dist
-    adj2 = g.adj.copy()
-    adj2[0, g.n - 1] = adj2[g.n - 1, 0] = 0.5
-    got = shortest_paths(G.Graph(adj=adj2, n=g.n), 0, engine="bellman").dist
-    r = np.where(np.isfinite(ref), ref, 1e30)
-    q = np.where(np.isfinite(got), got, 1e30)
-    assert (q <= r + 1e-3).all()
+    @settings(max_examples=15, deadline=None)
+    @given(graphs())
+    def test_property_monotone_in_edges(g):
+        """Adding an edge can only shorten distances."""
+        ref = shortest_paths(g, 0, engine="bellman").dist
+        adj2 = g.adj.copy()
+        adj2[0, g.n - 1] = adj2[g.n - 1, 0] = 0.5
+        got = shortest_paths(G.Graph(adj=adj2, n=g.n), 0,
+                             engine="bellman").dist
+        r = np.where(np.isfinite(ref), ref, 1e30)
+        q = np.where(np.isfinite(got), got, 1e30)
+        assert (q <= r + 1e-3).all()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_invariants():
+        """Placeholder so the skip is visible in reports."""
