@@ -1,6 +1,7 @@
-"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
-JSON records (single source of truth), leaving hand-written sections
-(§Paper, §Perf) intact via marker comments.
+"""Assemble EXPERIMENTS.md §Dry-run, §Roofline, and §SSSP-bench tables
+from the dry-run JSON records and BENCH_sssp.json (single sources of
+truth), leaving hand-written sections (§Paper, §Perf) intact via marker
+comments.
 
     PYTHONPATH=src python -m benchmarks.make_experiments_md
 """
@@ -13,6 +14,7 @@ import os
 from benchmarks.common import REPO
 
 DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+BENCH_JSON = os.path.join(REPO, "BENCH_sssp.json")
 MD = os.path.join(REPO, "EXPERIMENTS.md")
 
 BEGIN = "<!-- BEGIN GENERATED:{} -->"
@@ -72,6 +74,37 @@ def roofline_table(recs) -> str:
     return "\n".join(rows)
 
 
+def bench_tables(path: str) -> str:
+    """BENCH_sssp.json (benchmarks/run_bench.py) -> per-point engine table
+    plus the edges-relaxed gate summary."""
+    with open(path) as f:
+        doc = json.load(f)
+    meta = doc["meta"]
+    rows = [f"jax {meta['jax']} on {meta['backend']}"
+            f"{' (smoke)' if meta.get('smoke') else ''}, "
+            f"best of {meta['repeats']}; times are per source.",
+            "",
+            "| corpus | n | m | engine | time_s/src | sweeps "
+            "| edges relaxed |",
+            "|---|---|---|---|---|---|---|"]
+    for r in doc["results"]:
+        er = r["edges_relaxed"]
+        rows.append(
+            f"| {r['corpus']} | {r['n']} | {r['m']} | {r['engine']} "
+            f"| {r['time_s'] / r['sources']:.5f} | {r['sweeps'] or ''} "
+            f"| {'' if er is None else er} |")
+    gate = doc["gate"]
+    rows += ["", f"**Gate** ({gate['rule']}): "
+                 f"{'PASS' if gate['pass'] else 'FAIL'}",
+             "",
+             "| n | frontier edges | bellman_csr edges | ratio |",
+             "|---|---|---|---|"]
+    for p in gate["points"]:
+        rows.append(f"| {p['n']} | {p['frontier_edges']} "
+                    f"| {p['bellman_csr_edges']} | {p['edge_ratio']} |")
+    return "\n".join(rows)
+
+
 def splice(text: str, name: str, content: str) -> str:
     b, e = BEGIN.format(name), END.format(name)
     if b in text:
@@ -84,11 +117,16 @@ def splice(text: str, name: str, content: str) -> str:
 def main():
     recs = load(tagged=False)
     text = open(MD).read() if os.path.exists(MD) else "# EXPERIMENTS\n"
-    text = splice(text, "dryrun", dryrun_table(recs))
-    text = splice(text, "roofline", roofline_table(recs))
+    if recs:
+        text = splice(text, "dryrun", dryrun_table(recs))
+        text = splice(text, "roofline", roofline_table(recs))
+    if os.path.exists(BENCH_JSON):
+        text = splice(text, "sssp-bench", bench_tables(BENCH_JSON))
     with open(MD, "w") as f:
         f.write(text)
-    print(f"wrote tables for {len(recs)} records into {MD}")
+    print(f"wrote tables for {len(recs)} dry-run records"
+          f"{' + SSSP bench' if os.path.exists(BENCH_JSON) else ''}"
+          f" into {MD}")
 
 
 if __name__ == "__main__":

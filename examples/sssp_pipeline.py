@@ -15,7 +15,7 @@ import numpy as np
 import jax
 
 from repro.core import graph as G
-from repro.core.api import ENGINES, shortest_paths
+from repro.core.api import CSR_ENGINES, ENGINES, shortest_paths
 from repro.core.serial import dijkstra_serial_np
 
 
@@ -49,11 +49,13 @@ def main():
             print(f"  {engine:18s}: skipped (single device; "
                   "run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
             continue
-        src = (np.array([args.source]) if engine == "multisource"
+        src = (np.array([args.source])
+               if engine in ("multisource", "multisource_csr")
                else args.source)
-        # CSR engines get the sparse container directly — no dense matrix
-        # on their path at all.
-        arg_g = cg if engine.startswith("bellman_csr") else g
+        # CSR-native engines get the sparse container directly — no dense
+        # matrix on their path at all.
+        arg_g = (cg if engine in CSR_ENGINES or engine == "multisource_csr"
+                 else g)
         shortest_paths(arg_g, src, engine=engine, mesh=mesh)  # warmup/jit
         t0 = time.perf_counter()
         res = shortest_paths(arg_g, src, engine=engine, mesh=mesh)

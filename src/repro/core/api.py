@@ -13,8 +13,13 @@ Engines (paper §III):
     multisource        batched (S, n) fixpoint                   (beyond-paper)
     bellman_csr        fixpoint, O(m) segment-min sweep on CSR   (beyond-paper)
     bellman_csr_kernel fixpoint with the Pallas padded-ELL kernel (beyond-paper)
+    frontier           frontier-compacted sweeps, O(active out-degree)
+                       per sweep (beyond-paper, core/frontier.py)
+    frontier_kernel    same, Pallas candidate kernel (kernels/frontier_relax)
+    multisource_csr    batched (S, n) fixpoint on CSR edges      (beyond-paper)
 
-Choosing dense vs CSR (the paper's Table I vs Table II trade-off):
+Choosing dense vs CSR vs frontier (the paper's Table I vs Table II
+trade-off, plus its §V "every edge, every sweep" complaint):
     The dense engines sweep the n² adjacency matrix per relaxation, so
     their cost depends on n only — ideal for dense graphs (Table I, m ≈
     n²/2) where the matrix *is* the edge set.  For sparse graphs (Table II,
@@ -29,6 +34,26 @@ Choosing dense vs CSR (the paper's Table I vs Table II trade-off):
     O(n · max_in_degree) — on heavily skewed graphs (a hub vertex with ~n
     incoming arcs) that re-approaches O(n²); use ``bellman_csr`` (flat
     segment-min, strictly O(n + m)) for such degree distributions.
+
+    The ``frontier*`` engines go one step further: each sweep relaxes only
+    the out-edges of vertices whose distance improved last sweep, so
+    per-sweep work is O(frontier out-degree) instead of O(m).  They win
+    whenever frontiers stay narrow relative to the edge set — long-diameter
+    sparse graphs (road-network-like, the Table II shape at large n), where
+    late sweeps of ``bellman_csr`` touch all m arcs to improve a handful of
+    vertices.  They *lose* on dense diameter-2 graphs (Table I): there the
+    first frontier is essentially every vertex, so compaction adds overhead
+    while the sweep still touches ~every edge — keep ``bellman`` /
+    ``bellman_csr`` for those.  On heavy-tailed weight distributions pass
+    ``delta=`` to bucket the frontier Δ-stepping-style.  ``SsspResult.
+    edges_relaxed`` reports the measured relaxation work for all CSR-family
+    engines (benchmarks/run_bench.py tracks the ratio as a perf gate).
+
+    ``multisource_csr`` batches S sources over one shared edge gather per
+    sweep (the sparse twin of ``multisource``): use it to amortize the
+    edge-index loads when solving many sources on one sparse graph.  Like
+    ``multisource`` it returns ``pred=None``; :func:`recover_pred` rebuilds
+    the predecessor rows on demand at O(m) per source.
 """
 from __future__ import annotations
 
@@ -41,8 +66,11 @@ import numpy as np
 
 from repro.core import csr as csr_mod
 from repro.core import graph as graph_mod
-from repro.core.bellman import sssp_bellman, sssp_bellman_sharded
-from repro.core.bellman_csr import csr_operands, sssp_bellman_csr
+from repro.core.bellman import (predecessors_from_dist, sssp_bellman,
+                                sssp_bellman_sharded)
+from repro.core.bellman_csr import (csr_operands, predecessors_from_dist_csr,
+                                    sssp_bellman_csr, sssp_multisource_csr)
+from repro.core.frontier import frontier_operands, sssp_frontier
 from repro.core.multisource import sssp_multisource, sssp_multisource_sharded
 from repro.core.serial import dijkstra_serial
 from repro.core.sharded import dijkstra_sharded
@@ -56,17 +84,30 @@ ENGINES = (
     "multisource",
     "bellman_csr",
     "bellman_csr_kernel",
+    "frontier",
+    "frontier_kernel",
+    "multisource_csr",
 )
 
-CSR_ENGINES = ("bellman_csr", "bellman_csr_kernel")
+# single-source engines that consume CsrGraph operands natively (and return
+# a pred tree); multisource_csr also runs on CSR but is batched/pred-less.
+CSR_ENGINES = ("bellman_csr", "bellman_csr_kernel",
+               "frontier", "frontier_kernel")
+FRONTIER_ENGINES = ("frontier", "frontier_kernel")
 
 
 @dataclasses.dataclass
 class SsspResult:
     dist: np.ndarray            # (n,) or (S, n)
-    pred: Optional[np.ndarray]  # (n,) or None (multisource recovers on demand)
+    pred: Optional[np.ndarray]  # (n,) or None (recover_pred rebuilds it)
     sweeps: Optional[int]       # fixpoint engines only
     engine: str
+    # measured relaxation work, CSR-family engines only: the frontier
+    # engines count actual frontier out-degrees; bellman_csr* relax all
+    # nnz arcs every sweep.  The run_bench.py perf gate diffs these.
+    edges_relaxed: Optional[int] = None
+    # sources as submitted (multisource engines), for recover_pred.
+    sources: Optional[np.ndarray] = None
 
 
 def shortest_paths(
@@ -78,16 +119,19 @@ def shortest_paths(
     axis: str = "data",
     block: int = 256,
     max_sweeps: int | None = None,
+    delta: float | None = None,
 ) -> SsspResult:
     """Run one SSSP engine.  ``source`` is an int (or int array for
-    ``multisource``).  Sharded engines need a ``mesh``; the adjacency is
-    padded to the mesh-axis size automatically (paper §III-B.2)."""
+    ``multisource`` / ``multisource_csr``).  Sharded engines need a
+    ``mesh``; the adjacency is padded to the mesh-axis size automatically
+    (paper §III-B.2).  ``delta`` enables the frontier engines' Δ-bucket
+    schedule (ignored elsewhere)."""
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
 
     if isinstance(g, csr_mod.CsrGraph):
         cg, n_true = g, g.n
-        if engine not in CSR_ENGINES:
+        if engine not in CSR_ENGINES and engine != "multisource_csr":
             # dense engines need the matrix; O(n²), small-n convenience only.
             g = cg.to_dense()
     else:
@@ -98,6 +142,38 @@ def shortest_paths(
             n_true = adj_np.shape[0]
             g = graph_mod.Graph(adj=adj_np.astype(np.float32), n=n_true)
         cg = None
+
+    if engine in FRONTIER_ENGINES:
+        if cg is None:
+            cg = g.to_csr()
+        use_kernel = engine == "frontier_kernel"
+        operands = frontier_operands(cg, with_ell=use_kernel)
+        sweep_fn = None
+        if use_kernel:
+            from repro.kernels.frontier_relax.ops import make_frontier_sweep_fn
+
+            sweep_fn = make_frontier_sweep_fn(block_f=block)
+        d, p, s, e = sssp_frontier(
+            operands,
+            jnp.int32(source),
+            n=cg.n,
+            sweep_fn=sweep_fn,
+            max_sweeps=max_sweeps,
+            delta=delta,
+        )
+        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine,
+                          edges_relaxed=int(e))
+
+    if engine == "multisource_csr":
+        if cg is None:
+            cg = g.to_csr()
+        srcs = jnp.atleast_1d(jnp.asarray(source, jnp.int32))
+        D, s = sssp_multisource_csr(
+            csr_operands(cg), srcs, n=cg.n, max_sweeps=max_sweeps
+        )
+        return SsspResult(np.asarray(D), None, int(s), engine,
+                          edges_relaxed=int(s) * cg.nnz * srcs.shape[0],
+                          sources=np.asarray(srcs))
 
     if engine in CSR_ENGINES:
         if cg is None:
@@ -116,7 +192,8 @@ def shortest_paths(
             sweep_fn=sweep_fn,
             max_sweeps=max_sweeps,
         )
-        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine)
+        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine,
+                          edges_relaxed=int(s) * cg.nnz)
 
     if engine == "serial":
         d, p = dijkstra_serial(jnp.asarray(g.adj), jnp.int32(source))
@@ -146,9 +223,11 @@ def shortest_paths(
             D, s = sssp_multisource_sharded(
                 jnp.asarray(gp.adj), srcs, mesh, axis=axis, max_sweeps=max_sweeps
             )
-            return SsspResult(np.asarray(D)[:, :n_true], None, int(s), engine)
+            return SsspResult(np.asarray(D)[:, :n_true], None, int(s), engine,
+                              sources=np.asarray(srcs))
         D, s = sssp_multisource(jnp.asarray(g.adj), srcs, max_sweeps=max_sweeps)
-        return SsspResult(np.asarray(D), None, int(s), engine)
+        return SsspResult(np.asarray(D), None, int(s), engine,
+                          sources=np.asarray(srcs))
 
     # --- sharded engines -------------------------------------------------
     if mesh is None:
@@ -169,3 +248,42 @@ def shortest_paths(
     return SsspResult(
         np.asarray(d)[:n_true], np.asarray(p)[:n_true], int(s), engine
     )
+
+
+def recover_pred(
+    result: SsspResult,
+    g: "graph_mod.Graph | csr_mod.CsrGraph | jax.Array | np.ndarray",
+) -> np.ndarray:
+    """Rebuild predecessor rows for a result that skipped them.
+
+    The multisource engines return ``pred=None`` because at the fixpoint
+    the tree is a pure function of (dist, graph) — materializing S rows
+    eagerly would waste memory on callers that only need distances.  This
+    reuses the same recovery helpers the single-source engines run (so the
+    trees match them exactly, tie-breaks included): the O(m) segment-min
+    over CSR arcs for a ``CsrGraph``, the O(n²) masked argmin for a dense
+    graph.  Results that already carry a pred are returned as-is.
+
+    Output matches ``result.dist``'s shape: (S, n) for batched results,
+    (n,) for single-source.  Same validity caveat as the eager recoveries:
+    a valid tree whenever edge weights are strictly positive.
+    """
+    if result.pred is not None:
+        return result.pred
+    D = jnp.atleast_2d(jnp.asarray(result.dist, jnp.float32))
+    if result.sources is not None:
+        srcs = jnp.atleast_1d(jnp.asarray(result.sources, jnp.int32))
+    else:
+        # dist[source] == 0 is each row's minimum under nonnegative weights.
+        srcs = jnp.argmin(D, axis=1).astype(jnp.int32)
+    if isinstance(g, csr_mod.CsrGraph):
+        ops = csr_operands(g)
+        P = jax.vmap(lambda d, s: predecessors_from_dist_csr(d, ops, s))(
+            D, srcs
+        )
+    else:
+        adj = jnp.asarray(g.adj if isinstance(g, graph_mod.Graph) else g,
+                          jnp.float32)
+        P = jax.vmap(lambda d, s: predecessors_from_dist(d, adj, s))(D, srcs)
+    P = np.asarray(P)
+    return P if np.ndim(result.dist) == 2 else P[0]

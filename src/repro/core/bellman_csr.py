@@ -20,8 +20,12 @@ The kernel path (api engine ``bellman_csr_kernel``) swaps ``sweep_fn`` for
 the Pallas padded-ELL kernel in kernels/csr_relax — fixed-width rows so the
 block shapes are static, mirroring the paper's padding trick.
 
-Frontier masking works exactly as in the dense engine: sources whose dist
-did not improve last sweep are masked to INF and contribute nothing.
+Frontier-restricted relaxation lives in core/frontier.py (api engines
+``frontier`` / ``frontier_kernel``): it compacts the improved vertices and
+touches only their out-edges, O(frontier out-degree) per sweep instead of
+this engine's O(m).  ``sssp_multisource_csr`` below is the batched twin:
+S sources share one (S, m) gather of the edge arrays per sweep — the
+sparse analogue of core/multisource.py's min-plus matmul.
 """
 from __future__ import annotations
 
@@ -31,6 +35,8 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core.multisource import init_dist
 
 INF = jnp.inf
 
@@ -71,7 +77,7 @@ def segment_relax_sweep(dist: jax.Array, csr: dict) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "sweep_fn", "max_sweeps", "use_frontier")
+    jax.jit, static_argnames=("n", "sweep_fn", "max_sweeps")
 )
 def sssp_bellman_csr(
     csr: dict,
@@ -80,7 +86,6 @@ def sssp_bellman_csr(
     n: int,
     sweep_fn: Optional[Callable] = None,
     max_sweeps: int | None = None,
-    use_frontier: bool = False,
 ):
     """Fixpoint SSSP on CSR operands.  Returns (dist, pred, num_sweeps).
 
@@ -89,29 +94,73 @@ def sssp_bellman_csr(
     callers swap in the Pallas ELL kernel
     (kernels/csr_relax/ops.make_csr_sweep_fn) for the segment-min path;
     both satisfy the same oracle (kernels/csr_relax/ref.py).
+
+    Every sweep relaxes all m stored arcs; for frontier-restricted O(active
+    out-degree) sweeps use core.frontier.sssp_frontier instead (the old
+    dead-defaulted ``use_frontier`` flag here was removed in its favor).
     """
     cap = n if max_sweeps is None else max_sweeps
     sweep = sweep_fn or segment_relax_sweep
     dist0 = jnp.full((n,), INF, csr["w"].dtype).at[source].set(0.0)
 
     def cond(carry):
-        dist, prev, it, frontier = carry
+        dist, prev, it = carry
         return (it < cap) & jnp.any(dist != prev)
 
     def body(carry):
-        dist, _, it, frontier = carry
-        src = jnp.where(frontier, dist, INF) if use_frontier else dist
-        new = jnp.minimum(sweep(src, csr), dist)
-        return new, dist, it + 1, (new < dist) if use_frontier else frontier
+        dist, _, it = carry
+        new = jnp.minimum(sweep(dist, csr), dist)
+        return new, dist, it + 1
 
-    frontier0 = dist0 < INF
     # prev sentinel differs from dist0 so the loop runs at least once.
     prev0 = jnp.full_like(dist0, -1.0)
-    dist, _, sweeps, _ = lax.while_loop(
-        cond, body, (dist0, prev0, jnp.int32(0), frontier0)
+    dist, _, sweeps = lax.while_loop(
+        cond, body, (dist0, prev0, jnp.int32(0))
     )
     pred = predecessors_from_dist_csr(dist, csr, source)
     return dist, pred, sweeps
+
+
+def segment_relax_sweep_multi(D: jax.Array, csr: dict) -> jax.Array:
+    """Batched O(S·m) relax sweep over a (S, n) distance matrix: the sparse
+    twin of multisource.relax_sweep_multi_ref.  One gather of the edge
+    index arrays serves all S sources (vmap hoists the shared ``src``/
+    ``dst`` loads), so arithmetic intensity rises S× exactly as in the
+    dense batched engine — per-row results are bitwise identical to S
+    independent ``segment_relax_sweep`` calls by construction."""
+    return jax.vmap(lambda d: segment_relax_sweep(d, csr))(D)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "sweep_fn", "max_sweeps"))
+def sssp_multisource_csr(
+    csr: dict,
+    sources: jax.Array,
+    *,
+    n: int,
+    sweep_fn: Optional[Callable] = None,
+    max_sweeps: int | None = None,
+):
+    """Batched fixpoint SSSP from S sources on CSR operands.  Returns
+    (D (S, n), sweeps); per-source rows equal S single-source solves run to
+    their joint fixpoint (the sweep count is the max over sources).  pred
+    is recovered on demand — api.recover_pred reuses the O(m) recovery per
+    row."""
+    cap = n if max_sweeps is None else max_sweeps
+    sweep = sweep_fn or segment_relax_sweep_multi
+    D0 = init_dist(n, sources, csr["w"].dtype)
+
+    def cond(carry):
+        D, prev, it = carry
+        return (it < cap) & jnp.any(D != prev)
+
+    def body(carry):
+        D, _, it = carry
+        new = jnp.minimum(sweep(D, csr), D)
+        return new, D, it + 1
+
+    prev0 = jnp.full_like(D0, -1.0)
+    D, _, sweeps = lax.while_loop(cond, body, (D0, prev0, jnp.int32(0)))
+    return D, sweeps
 
 
 def predecessors_from_dist_csr(dist: jax.Array, csr: dict, source) -> jax.Array:

@@ -29,6 +29,29 @@ import numpy as np
 from repro.core.graph import Graph, INF, random_edge_list
 
 
+def _build_ell(
+    indptr: np.ndarray, ids: np.ndarray, weights: np.ndarray,
+    n: int, width_multiple: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pack one CSR orientation into padded ELL: (n, K) int32 ids and
+    (n, K) float32 weights, K = max row degree rounded up to
+    ``width_multiple`` (min one lane group even for edgeless graphs).
+    Padding slots are (0, INF): an INF candidate can never win a min, the
+    same unreachable-padding argument as the paper's padded matrix.
+    Shared by the incoming (``ell``) and outgoing (``out_ell``) views so
+    the padding rules cannot diverge."""
+    deg = np.diff(indptr)
+    max_deg = int(deg.max()) if deg.size else 0
+    K = -(-max(max_deg, 1) // width_multiple) * width_multiple
+    idx = np.zeros((n, K), np.int32)
+    w = np.full((n, K), INF, np.float32)
+    rows = np.repeat(np.arange(n), deg)
+    pos = np.arange(int(indptr[-1])) - np.repeat(indptr[:-1], deg)
+    idx[rows, pos] = ids
+    w[rows, pos] = weights
+    return idx, w
+
+
 @dataclasses.dataclass(frozen=True)
 class CsrGraph:
     """Incoming-edge CSR graph.
@@ -95,17 +118,43 @@ class CsrGraph:
         ``bellman_csr`` engine) stay O(n + m) regardless.
         """
         def build():
-            deg = np.diff(self.indptr)
-            max_deg = int(deg.max()) if deg.size else 0
-            K = -(-max(max_deg, 1) // width_multiple) * width_multiple
-            idx = np.zeros((self.n, K), np.int32)
-            w = np.full((self.n, K), INF, np.float32)
-            rows = np.repeat(np.arange(self.n), deg)
-            pos = np.arange(self.nnz) - np.repeat(self.indptr[:-1], deg)
-            idx[rows, pos] = self.indices
-            w[rows, pos] = self.weights
-            return idx, w
+            return _build_ell(self.indptr, self.indices, self.weights,
+                              self.n, width_multiple)
         return self._memo(("_ell", width_multiple), build)
+
+    def out_csr(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Outgoing-edge CSR view: ``(out_indptr, out_dst, out_w)``.
+
+        Row u holds u's *outgoing* arcs — ``out_dst[out_indptr[u] :
+        out_indptr[u+1]]`` are the vertices u reaches — sorted by
+        (src, dst).  The stored container is incoming-only (rows = "who
+        reaches v?", the pull formulation every whole-graph sweep wants);
+        frontier-driven relaxation asks the opposite question ("whom does
+        the improved vertex u push to?"), so this is the transpose,
+        built once in O(m log m) and memoized like the other views.
+        """
+        def build():
+            src = np.asarray(self.indices, np.int64)
+            dst = self.dst_ids().astype(np.int64)
+            order = np.lexsort((dst, src))              # by src, then dst
+            out_dst = dst[order].astype(np.int32)
+            out_w = np.asarray(self.weights)[order]
+            counts = np.bincount(src, minlength=self.n)
+            indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+            return indptr, out_dst, out_w
+        return self._memo("_out_csr", build)
+
+    def out_ell(self, width_multiple: int = 8) -> tuple[np.ndarray, np.ndarray]:
+        """Padded-ELL view of :meth:`out_csr`: (n, K) int32 destination ids
+        and (n, K) float32 weights, K = max *out*-degree rounded up to
+        ``width_multiple``.  Padding slots are (0, INF) — an INF candidate
+        scatter-min'd into vertex 0 never wins, the push-side twin of
+        ``ell()``'s unreachable-padding argument.  Memoized per width.
+        """
+        def build():
+            indptr, out_dst, out_w = self.out_csr()
+            return _build_ell(indptr, out_dst, out_w, self.n, width_multiple)
+        return self._memo(("_out_ell", width_multiple), build)
 
     @classmethod
     def from_dense(cls, g: Graph) -> "CsrGraph":

@@ -1,0 +1,191 @@
+"""Frontier-compacted SSSP over outgoing CSR edges — O(frontier out-degree)
+per sweep.
+
+The paper's §V diagnosis (inherited verbatim by ``bellman_csr``): the
+fixpoint relaxes *every* edge every sweep, so sweeps late in convergence do
+O(m) work to improve a handful of vertices.  Δ-stepping (Kranjčević et al.,
+arXiv:1604.02113) and Kainer & Träff (arXiv:1903.12085) both locate the win
+in restricting relaxation to the **active frontier** — the vertices whose
+distance improved last sweep.  This engine does exactly that, with every
+shape static so the whole loop stays inside one jit:
+
+1. **Compact** the frontier mask with a static-size ``jnp.nonzero`` (padded
+   with the sentinel id n) and an exclusive cumsum of out-degrees — the
+   classic stream-compaction step of GPU frontier BFS/SSSP.
+2. **Gather** only the frontier vertices' out-edge windows from the
+   outgoing CSR view (``CsrGraph.out_csr()``), a chunk of edge slots at a
+   time: the *number of chunks* ``ceil(E / chunk)`` is a traced value of an
+   inner ``lax.while_loop``, so per-sweep work tracks the actual frontier
+   edge count E (rounded up to one chunk) instead of m.
+3. **Scatter-min** the candidates ``dist[u] + w`` into the new distance
+   vector with ``.at[dst].min`` — the TPU-legal replacement for the CUDA
+   kernel's ``atomicMin``, associative and deterministic.
+
+Per-sweep results are bitwise identical to ``bellman_csr`` restricted to
+the frontier's candidate set, and the fixpoint (hence the distances) is
+bitwise identical to every other engine: min over the same f32 path sums.
+
+An optional **Δ-bucket schedule** (``delta=...``) bounds frontier growth on
+weighted graphs: only pending vertices with ``dist <= limit`` are expanded,
+and the limit advances by Δ when the current bucket drains — Δ-stepping
+restricted to the jit-static state (dist, pending, limit).  ``delta=None``
+(default) expands the full improved set each sweep (Bellman-Ford ordering).
+
+The engine also counts **edges relaxed** (sum of frontier out-degrees over
+all sweeps) so the O(frontier) claim is measurable: ``bellman_csr`` relaxes
+``nnz * sweeps``; this engine's counter is strictly smaller whenever any
+sweep's frontier misses a vertex (see benchmarks/run_bench.py's gate).
+
+The kernel path (api engine ``frontier_kernel``) swaps the inner chunk
+relax for the Pallas candidate kernel in kernels/frontier_relax, which
+streams the compacted frontier's padded out-ELL windows (CsrGraph.out_ell)
+in fixed-size row blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.bellman_csr import csr_operands, predecessors_from_dist_csr
+
+INF = jnp.inf
+
+
+def frontier_operands(cg, *, with_ell: bool = False) -> dict:
+    """Stage a core.csr.CsrGraph for the frontier engine.
+
+    Extends :func:`csr_operands` (incoming src/dst/w — kept for the O(m)
+    pred recovery at the fixpoint) with the outgoing CSR view.  The
+    out-indptr is staged with one extra trailing entry so the compaction
+    sentinel id n indexes a zero-degree row instead of falling off the end.
+    ``with_ell`` adds the padded out-ELL view the Pallas kernel consumes.
+    """
+    ops = csr_operands(cg)
+    indptr, out_dst, out_w = cg.out_csr()
+    indptr_s = np.concatenate([indptr, indptr[-1:]])     # (n + 2,)
+    ops["out_indptr"] = jnp.asarray(indptr_s, jnp.int32)
+    ops["out_dst"] = jnp.asarray(out_dst)
+    ops["out_w"] = jnp.asarray(out_w)
+    if with_ell:
+        ell_idx, ell_w = cg.out_ell()
+        ops["out_ell_idx"] = jnp.asarray(ell_idx)
+        ops["out_ell_w"] = jnp.asarray(ell_w)
+    return ops
+
+
+@functools.lru_cache(maxsize=None)
+def make_flat_sweep_fn(chunk: int = 1024) -> Callable:
+    """Default frontier sweep: flat-CSR edge windows, ``chunk`` edge slots
+    per inner step.  Memoized so the closure identity is stable — it is a
+    static jit argument of the engine (same contract as make_csr_sweep_fn).
+
+    The sweep contract (shared with kernels/frontier_relax/ops.py):
+    ``sweep(dist, fids, starts, off, E, fcount, ops) -> new_dist`` where
+    fids (n,) are the compacted frontier ids (sentinel-n padded), starts
+    their out-window starts, off the exclusive cumsum of their out-degrees,
+    E the total frontier out-degree and fcount the frontier size.  Reads
+    come from the ``dist`` snapshot (Jacobi sweep semantics, like every
+    other engine), writes scatter-min into the running copy.
+    """
+
+    def sweep(dist, fids, starts, off, E, fcount, ops):
+        n = dist.shape[0]
+        m = ops["out_dst"].shape[0]
+        if m == 0:                                # edgeless graph: no work
+            return dist
+
+        def cond(carry):
+            _, c = carry
+            return c * chunk < E
+
+        def body(carry):
+            nd, c = carry
+            slots = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            valid = slots < E
+            # slot -> owning frontier row: last row whose window starts at
+            # or before the slot ('right' lands past zero-degree ties).
+            row = jnp.searchsorted(off, slots, side="right") - 1
+            row = jnp.clip(row, 0, n - 1)
+            pos = starts[row] + (slots - off[row])
+            pos = jnp.clip(pos, 0, m - 1)
+            u = jnp.minimum(fids[row], n - 1)
+            cand = jnp.where(valid, dist[u] + ops["out_w"][pos], INF)
+            tgt = jnp.where(valid, ops["out_dst"][pos], n)   # n -> dropped
+            return nd.at[tgt].min(cand, mode="drop"), c + 1
+
+        nd, _ = lax.while_loop(cond, body, (dist, jnp.int32(0)))
+        return nd
+
+    return sweep
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "sweep_fn", "max_sweeps", "delta", "chunk")
+)
+def sssp_frontier(
+    ops: dict,
+    source: jax.Array,
+    *,
+    n: int,
+    sweep_fn: Optional[Callable] = None,
+    max_sweeps: int | None = None,
+    delta: float | None = None,
+    chunk: int = 1024,
+):
+    """Frontier-compacted fixpoint SSSP on :func:`frontier_operands`.
+
+    Returns ``(dist, pred, num_sweeps, edges_relaxed)`` — the last being
+    the total frontier out-degree summed over sweeps, the engine's actual
+    relaxation work (compare ``nnz * num_sweeps`` for ``bellman_csr``).
+
+    ``delta`` enables the Δ-bucket schedule (see module docstring): when a
+    bucket drains, the same sweep advances the limit and immediately
+    relaxes the next bucket's active set, so every sweep does edge work —
+    but deferred vertices re-enter later buckets, which can take more
+    sweeps than the plain schedule.  ``chunk`` sizes the inner edge-slot
+    blocks of the default sweep (ignored when ``sweep_fn`` is given).
+    """
+    sweep = sweep_fn or make_flat_sweep_fn(chunk)
+    # Δ-bucketing re-expands deferred vertices across later buckets, so
+    # allow headroom beyond the plain engine's hop-diameter bound; the
+    # pending-empty exit is the real stop.
+    cap = (n if delta is None else 4 * n) if max_sweeps is None else max_sweeps
+    dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
+    pending0 = dist0 < INF
+    limit0 = jnp.float32(0.0 if delta is None else delta)
+
+    def cond(carry):
+        _, pending, _, it, _ = carry
+        return (it < cap) & jnp.any(pending)
+
+    def body(carry):
+        dist, pending, limit, it, edges = carry
+        if delta is None:
+            active = pending
+        else:
+            has = jnp.any(pending & (dist <= limit))
+            nxt = jnp.min(jnp.where(pending, dist, INF)) + delta
+            limit = jnp.where(has, limit, nxt)
+            active = pending & (dist <= limit)
+        fids = jnp.nonzero(active, size=n, fill_value=n)[0].astype(jnp.int32)
+        fcount = jnp.sum(active)
+        starts = ops["out_indptr"][fids]
+        degs = ops["out_indptr"][fids + 1] - starts
+        csum = jnp.cumsum(degs)
+        E, off = csum[-1], csum - degs
+        new = sweep(dist, fids, starts, off, E, fcount, ops)
+        improved = new < dist
+        pending = (pending & ~active) | improved
+        return new, pending, limit, it + 1, edges + E
+
+    dist, _, _, sweeps, edges = lax.while_loop(
+        cond, body,
+        (dist0, pending0, limit0, jnp.int32(0), jnp.int32(0)),
+    )
+    pred = predecessors_from_dist_csr(dist, ops, source)
+    return dist, pred, sweeps, edges

@@ -1,0 +1,11 @@
+from repro.kernels.frontier_relax.ops import (frontier_cand_block,
+                                              make_frontier_sweep_fn)
+from repro.kernels.frontier_relax.ref import (frontier_cand_ref,
+                                              frontier_relax_ref)
+
+__all__ = [
+    "frontier_cand_block",
+    "make_frontier_sweep_fn",
+    "frontier_cand_ref",
+    "frontier_relax_ref",
+]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for frontier-compacted candidate generation.
+
+The frontier engine (core/frontier.py) relaxes only the active vertices'
+out-edges.  The streaming half of that sweep — gather each compacted
+frontier vertex's distance and add it across its padded out-ELL window —
+is dense, regular work over (F, K) blocks, and that is what this kernel
+owns:
+
+    cand[f, k] = dist[fids[f]] + ell_w[f, k]        (INF when fids[f] == n)
+
+The scatter-min of ``cand`` into the destination vertices stays outside in
+XLA (``.at[].min``): TPU Pallas has no scatter primitive, and XLA's native
+deterministic scatter lowering is exactly the associative ``atomicMin``
+replacement the other engines already rely on.  The split keeps the kernel
+TPU-legal — the frontier-id gather lowers to the same Mosaic dynamic-gather
+path as kernels/csr_relax's row gather — while the kernel still touches
+only the compacted frontier's edge windows, never the full edge set.
+
+Grid is (F//bf, K//bk); the dist vector rides along fully resident in VMEM
+(one (1, n) block every step, as in kernels/csr_relax) and each step reads
+its (1, bf) slice of frontier ids.  Sentinel ids (== n, the compaction
+padding) yield INF candidates, which the scatter-min epilogue ignores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _frontier_cand_kernel(dist_ref, fid_ref, w_ref, out_ref):
+    """dist_ref: (1, n) full vector; fid_ref: (1, bf) int32 frontier ids;
+    w_ref/out_ref: (bf, bk) out-ELL weight / candidate blocks."""
+    d = dist_ref[...][0]                                     # (n,)
+    fid = fid_ref[...][0]                                    # (bf,)
+    n = d.shape[0]
+    df = jnp.where(fid < n, d[jnp.minimum(fid, n - 1)], jnp.inf)
+    out_ref[...] = df[:, None] + w_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_f", "block_k", "interpret")
+)
+def frontier_cand(
+    dist: jax.Array,
+    fids: jax.Array,
+    ell_w: jax.Array,
+    *,
+    block_f: int = 256,
+    block_k: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """dist[fids[f]] + ell_w[f, k] for the compacted frontier (INF past the
+    sentinel).  Requires F % block_f == 0 and K % block_k == 0 (ops.py pads
+    to the grid).  Returns the raw (F, K) candidate block."""
+    n = dist.shape[0]
+    F, K = ell_w.shape
+    if block_k is None:
+        block_k = K
+    assert fids.shape == (F,), (fids.shape, F)
+    assert F % block_f == 0 and K % block_k == 0, (F, K, block_f, block_k)
+    grid = (F // block_f, K // block_k)
+    out = pl.pallas_call(
+        _frontier_cand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n), lambda f, k: (0, 0)),           # full dist
+            pl.BlockSpec((1, block_f), lambda f, k: (0, f)),
+            pl.BlockSpec((block_f, block_k), lambda f, k: (f, k)),
+        ],
+        out_specs=pl.BlockSpec((block_f, block_k), lambda f, k: (f, k)),
+        out_shape=jax.ShapeDtypeStruct((F, K), dist.dtype),
+        interpret=interpret,
+    )(dist[None, :], fids[None, :], ell_w)
+    return out

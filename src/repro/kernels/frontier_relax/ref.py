@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the frontier_relax Pallas kernel.
+
+Frontier relaxation is adds + mins over f32, exact like the other sweeps,
+so the kernel must agree with these *bitwise* — and a full frontier sweep
+assembled from the kernel must agree bitwise with the flat-CSR sweep in
+core/frontier.py, since both scatter-min the same candidate multiset (the
+ELL path merely adds INF no-op candidates from padding slots).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def frontier_cand_ref(dist: jnp.ndarray, fids: jnp.ndarray,
+                      ell_w: jnp.ndarray) -> jnp.ndarray:
+    """Candidate block the kernel computes: (n,), (F,), (F, K) -> (F, K).
+
+    cand[f, k] = dist[fids[f]] + ell_w[f, k], INF where fids[f] == n
+    (the compaction sentinel).
+    """
+    n = dist.shape[0]
+    df = jnp.where(fids < n, dist[jnp.minimum(fids, n - 1)], jnp.inf)
+    return df[:, None] + ell_w
+
+
+def frontier_relax_ref(dist: jnp.ndarray, active: jnp.ndarray,
+                       out_ell_idx: jnp.ndarray,
+                       out_ell_w: jnp.ndarray) -> jnp.ndarray:
+    """One full frontier sweep, uncompacted: relax every out-edge of every
+    active vertex against the ``dist`` snapshot.  (n,), (n,) bool, (n, K),
+    (n, K) -> (n,).  Inactive rows contribute INF candidates (no-ops), so
+    this is the sweep the compacted engine must reproduce bitwise.
+    """
+    df = jnp.where(active, dist, jnp.inf)
+    cand = df[:, None] + out_ell_w                           # (n, K)
+    return dist.at[out_ell_idx].min(cand)

@@ -29,13 +29,15 @@ def main(argv=None):
     ap.add_argument("--engine", default="serial",
                     choices=["serial", "dijkstra_sharded", "bellman",
                              "bellman_kernel", "bellman_sharded",
-                             "multisource"])
+                             "multisource", "bellman_csr",
+                             "bellman_csr_kernel", "frontier",
+                             "frontier_kernel", "multisource_csr"])
     ap.add_argument("--nodes", type=int, default=1000)
     ap.add_argument("--edges", type=int, default=3000)
     ap.add_argument("--procs", type=int, default=1)
     ap.add_argument("--source", type=int, default=0)
     ap.add_argument("--sources", type=int, default=8,
-                    help="batch size for --engine multisource")
+                    help="batch size for the multisource engines")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--directed", action="store_true",
                     help="the paper's -w flag")
@@ -57,7 +59,8 @@ def main(argv=None):
             axis_types=(jax.sharding.AxisType.Auto,))
 
     source = (np.arange(args.sources) % args.nodes
-              if args.engine == "multisource" else args.source)
+              if args.engine in ("multisource", "multisource_csr")
+              else args.source)
 
     times = []
     res = None
@@ -68,7 +71,9 @@ def main(argv=None):
     best = min(times)
     print(f"engine={args.engine} n={args.nodes} m={args.edges} "
           f"procs={args.procs} time={best:.6f}s"
-          + (f" sweeps={res.sweeps}" if res.sweeps is not None else ""))
+          + (f" sweeps={res.sweeps}" if res.sweeps is not None else "")
+          + (f" edges_relaxed={res.edges_relaxed}"
+             if res.edges_relaxed is not None else ""))
 
     if args.verify:
         ref, _ = dijkstra_serial_np(g.adj, args.source)

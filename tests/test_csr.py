@@ -168,11 +168,19 @@ def test_kernel_block_shapes(block_v, block_k):
 # engine behaviors
 # ---------------------------------------------------------------------------
 
-def test_csr_frontier_variant_matches():
+def test_csr_engine_has_no_dead_frontier_flag():
+    """The old ``use_frontier`` parameter was computed-but-dead (defaulted
+    off, never wired through the api); frontier relaxation now lives in
+    core/frontier.py as a real engine (test_frontier.py), and the flag is
+    gone for good."""
+    import inspect
+
+    sig = inspect.signature(sssp_bellman_csr.__wrapped__)
+    assert "use_frontier" not in sig.parameters
     cg = C.random_csr_graph(70, 280, seed=5)
     ops = csr_operands(cg)
     d0, _, _ = sssp_bellman_csr(ops, jnp.int32(0), n=cg.n)
-    d1, _, _ = sssp_bellman_csr(ops, jnp.int32(0), n=cg.n, use_frontier=True)
+    d1 = shortest_paths(cg, 0, engine="frontier").dist
     assert np.array_equal(np.asarray(d0), np.asarray(d1))
 
 
