@@ -1,20 +1,22 @@
-"""Assemble EXPERIMENTS.md §Dry-run, §Roofline, and §SSSP-bench tables
-from the dry-run JSON records and BENCH_sssp.json (single sources of
-truth), leaving hand-written sections (§Paper, §Perf) intact via marker
-comments.
+"""Assemble EXPERIMENTS.md §Dry-run, §Roofline, §SSSP-bench, and
+§Weak-scaling tables from the dry-run JSON records, BENCH_sssp.json, and
+experiments/bench/weak_scaling.csv (single sources of truth), leaving
+hand-written sections (§Paper, §Perf) intact via marker comments.
 
     PYTHONPATH=src python -m benchmarks.make_experiments_md
 """
 from __future__ import annotations
 
+import csv
 import glob
 import json
 import os
 
-from benchmarks.common import REPO
+from benchmarks.common import OUT_DIR, REPO
 
 DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
 BENCH_JSON = os.path.join(REPO, "BENCH_sssp.json")
+WEAK_CSV = os.path.join(OUT_DIR, "weak_scaling.csv")
 MD = os.path.join(REPO, "EXPERIMENTS.md")
 
 BEGIN = "<!-- BEGIN GENERATED:{} -->"
@@ -82,15 +84,17 @@ def bench_tables(path: str) -> str:
     meta = doc["meta"]
     rows = [f"jax {meta['jax']} on {meta['backend']}"
             f"{' (smoke)' if meta.get('smoke') else ''}, "
-            f"best of {meta['repeats']}; times are per source.",
+            f"best of {meta['repeats']}; times are per source; sharded "
+            f"engines run on {meta.get('devices', 1)} forced host devices.",
             "",
-            "| corpus | n | m | engine | time_s/src | sweeps "
+            "| corpus | n | m | engine | P | time_s/src | sweeps "
             "| edges relaxed |",
-            "|---|---|---|---|---|---|---|"]
+            "|---|---|---|---|---|---|---|---|"]
     for r in doc["results"]:
         er = r["edges_relaxed"]
         rows.append(
             f"| {r['corpus']} | {r['n']} | {r['m']} | {r['engine']} "
+            f"| {r.get('procs', 1)} "
             f"| {r['time_s'] / r['sources']:.5f} | {r['sweeps'] or ''} "
             f"| {'' if er is None else er} |")
     gate = doc["gate"]
@@ -102,6 +106,34 @@ def bench_tables(path: str) -> str:
     for p in gate["points"]:
         rows.append(f"| {p['n']} | {p['frontier_edges']} "
                     f"| {p['bellman_csr_edges']} | {p['edge_ratio']} |")
+    gs = doc.get("gate_sharded")
+    if gs:
+        rows += ["", f"**Gate** ({gs['rule']}): "
+                     f"{'PASS' if gs['pass'] else 'FAIL'}",
+                 "",
+                 "| n | P | frontier_sharded edges | frontier edges |",
+                 "|---|---|---|---|"]
+        for p in gs["points"]:
+            rows.append(f"| {p['n']} | {p['procs']} "
+                        f"| {p['frontier_sharded_edges']} "
+                        f"| {p['frontier_edges']} |")
+    return "\n".join(rows)
+
+
+def weak_scaling_table(path: str) -> str:
+    """experiments/bench/weak_scaling.csv (benchmarks/weak_scaling.py) ->
+    fixed-n/proc scaling table: dense column slabs vs the vertex-
+    partitioned CSR engines (the paper's footnote-7 experiment, the CSR
+    leg at 8x the per-process vertex count since no dense matrix exists
+    on that path)."""
+    with open(path) as f:
+        rd = list(csv.reader(f))
+    rows = ["fixed vertices/process; efficiency = t(P=1) / t(P).",
+            "",
+            "| " + " | ".join(rd[0]) + " |",
+            "|" + "---|" * len(rd[0])]
+    for r in rd[1:]:
+        rows.append("| " + " | ".join(r) + " |")
     return "\n".join(rows)
 
 
@@ -122,10 +154,13 @@ def main():
         text = splice(text, "roofline", roofline_table(recs))
     if os.path.exists(BENCH_JSON):
         text = splice(text, "sssp-bench", bench_tables(BENCH_JSON))
+    if os.path.exists(WEAK_CSV):
+        text = splice(text, "weak-scaling", weak_scaling_table(WEAK_CSV))
     with open(MD, "w") as f:
         f.write(text)
     print(f"wrote tables for {len(recs)} dry-run records"
           f"{' + SSSP bench' if os.path.exists(BENCH_JSON) else ''}"
+          f"{' + weak scaling' if os.path.exists(WEAK_CSV) else ''}"
           f" into {MD}")
 
 

@@ -20,15 +20,41 @@ exact, so agreement is exact equality, not allclose).
 
     PYTHONPATH=src python -m benchmarks.run_bench [--smoke | --full]
                                                   [--out PATH] [--repeats N]
+                                                  [--devices P]
 
 ``--smoke`` caps every corpus for CI (< ~1 min on CPU); ``--full`` extends
-the sparse corpus to the paper's 40,000-vertex ceiling point.
+the sparse corpus to the paper's 40,000-vertex ceiling point.  ``--devices
+P`` (default 4) adds the vertex-partitioned sharded CSR engines on a
+P-device mesh — on CPU the device count is forced before jax initializes,
+the MPI-procs analogue; ``--devices 1`` drops the sharded leg.
 """
 from __future__ import annotations
 
+import os
+import sys
+
+# Device count must be fixed before jax initializes; parse --devices by
+# hand (same pattern as launch/sssp_run.py's --procs).
+_DEFAULT_DEVICES = 4
+if __name__ == "__main__" and "--help" not in sys.argv and "-h" not in sys.argv:
+    _n = _DEFAULT_DEVICES
+    for _i, _a in enumerate(sys.argv):
+        # accept both `--devices N` and `--devices=N`; malformed values
+        # fall through to argparse below for the proper usage error.
+        try:
+            if _a == "--devices":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--devices="):
+                _n = int(_a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            break
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", ""))
+
 import argparse
 import json
-import os
 import platform
 import time
 
@@ -55,6 +81,11 @@ ENGINE_CAPS = {
     "frontier": None,
     "frontier_kernel": 1000,
     "multisource_csr": None,
+    # sharded CSR engines: pure-XLA shard_map, no Pallas interpret cost,
+    # and the compiled fixpoint is memoized per (mesh, shapes)
+    # (core/sharded_csr._build_*), so repeat solves don't re-trace.
+    "bellman_csr_sharded": None,
+    "frontier_sharded": None,
 }
 SMOKE_CAPS = {k: 1000 if v is None else 100 for k, v in ENGINE_CAPS.items()}
 
@@ -62,15 +93,18 @@ DENSE_ENGINES = ("serial", "bellman", "bellman_kernel",
                  "bellman_csr", "frontier")
 SPARSE_ENGINES = ("serial", "bellman", "bellman_csr", "bellman_csr_kernel",
                   "frontier", "frontier_kernel", "multisource_csr")
+SHARDED_CSR = ("bellman_csr_sharded", "frontier_sharded")
 
 N_SOURCES = 4                     # batch width for multisource_csr
 
 
-def _bench_point(corpus: str, n: int, m: int, engines, caps, repeats):
+def _bench_point(corpus: str, n: int, m: int, engines, caps, repeats,
+                 mesh=None):
     """Run every applicable engine on one corpus point; returns records."""
     cg = C.random_csr_graph(n, m, seed=n + m)
     g = cg.to_dense() if n <= 2000 else None      # dense engines' input
     srcs = np.linspace(0, n - 1, N_SOURCES).astype(np.int32)
+    procs = mesh.devices.size if mesh is not None else 1
     records, anchor = [], None
     for engine in engines:
         cap = caps.get(engine)
@@ -79,11 +113,15 @@ def _bench_point(corpus: str, n: int, m: int, engines, caps, repeats):
         needs_dense = engine in ("serial", "bellman", "bellman_kernel")
         if needs_dense and g is None:
             continue
+        sharded = engine in SHARDED_CSR
+        if sharded and mesh is None:
+            continue
         arg = g if needs_dense else cg
         src = srcs if engine == "multisource_csr" else 0
-        res = shortest_paths(arg, src, engine=engine)    # warm + verify run
+        kw = {"mesh": mesh} if sharded else {}
+        res = shortest_paths(arg, src, engine=engine, **kw)  # warm + verify
         t = time_engine(
-            lambda: shortest_paths(arg, src, engine=engine),
+            lambda: shortest_paths(arg, src, engine=engine, **kw),
             repeats=repeats, warmup=0,     # the verify run already warmed jit
         )
         d0 = res.dist[0] if res.dist.ndim == 2 else res.dist
@@ -97,11 +135,13 @@ def _bench_point(corpus: str, n: int, m: int, engines, caps, repeats):
             "engine": engine, "time_s": round(t, 6),
             "sweeps": res.sweeps, "edges_relaxed": res.edges_relaxed,
             "sources": N_SOURCES if engine == "multisource_csr" else 1,
+            "procs": procs if sharded else 1,
             "agrees_bitwise": agree,
         }
         records.append(rec)
         per_src = t / rec["sources"]
-        print(f"  {corpus} n={n:6d} {engine:18s} {per_src:9.5f}s/src "
+        tag = f"{engine}@P{procs}" if sharded else engine
+        print(f"  {corpus} n={n:6d} {tag:18s} {per_src:9.5f}s/src "
               f"sweeps={res.sweeps} edges={res.edges_relaxed}", flush=True)
     return records
 
@@ -148,11 +188,57 @@ def _gate(results, min_n: int = 10000):
     }
 
 
+def _gate_sharded(results):
+    """frontier_sharded must relax NO MORE edges than the single-device
+    frontier engine on every sparse point where both ran — the partition
+    assigns each arc exactly one owner, so the psum of per-owner counters
+    equals the single-device counter; any excess means the exchange is
+    re-relaxing arcs.  Absent when no sharded leg ran (--devices 1)."""
+    by_point = {}
+    for r in results:
+        if r["corpus"] == "sparse" and r["engine"] in ("frontier",
+                                                       "frontier_sharded"):
+            by_point.setdefault(r["n"], {})[r["engine"]] = r
+    pts = []
+    for n in sorted(by_point):
+        pair = by_point[n]
+        if "frontier" not in pair or "frontier_sharded" not in pair:
+            continue
+        fe = pair["frontier"]["edges_relaxed"]
+        se = pair["frontier_sharded"]["edges_relaxed"]
+        pts.append({
+            "n": n, "m": pair["frontier_sharded"]["m"],
+            "procs": pair["frontier_sharded"]["procs"],
+            "frontier_sharded_edges": se, "frontier_edges": fe,
+            "no_more": se <= fe,
+        })
+    if not pts:
+        return None
+    procs = pts[0]["procs"]
+    return {
+        "rule": (f"frontier_sharded at P={procs} relaxes no more edges than "
+                 "single-device frontier on every shared sparse point "
+                 "(same work, partitioned)"),
+        "points": pts,
+        "pass": all(p["no_more"] for p in pts),
+    }
+
+
 def run(smoke: bool = False, full: bool = False, repeats: int = 3,
-        out: str = DEFAULT_OUT) -> str:
+        out: str = DEFAULT_OUT, devices: int = 1) -> str:
     caps = SMOKE_CAPS if smoke else ENGINE_CAPS
     dense_cap = 100 if smoke else 2000
     sparse_cap = 1000 if smoke else (40000 if full else 20000)
+    mesh = None
+    if devices > 1:
+        if jax.device_count() < devices:
+            raise SystemExit(
+                f"--devices {devices} needs {devices} XLA devices but only "
+                f"{jax.device_count()} exist (run via `python -m "
+                f"benchmarks.run_bench`, which forces the host device count)")
+        from repro.core._compat import make_mesh
+        mesh = make_mesh((devices,), ("data",))
+    sparse_engines = SPARSE_ENGINES + (SHARDED_CSR if mesh is not None else ())
     results = []
     for n, m in G.PAPER_DENSE:
         if n <= dense_cap:
@@ -160,20 +246,23 @@ def run(smoke: bool = False, full: bool = False, repeats: int = 3,
                                     caps, repeats)
     for n, m in G.PAPER_SPARSE:
         if n <= sparse_cap:
-            results += _bench_point("sparse", n, m, SPARSE_ENGINES,
-                                    caps, repeats)
+            results += _bench_point("sparse", n, m, sparse_engines,
+                                    caps, repeats, mesh=mesh)
     gate = _gate(results)
+    gate_sharded = _gate_sharded(results)
     doc = {
-        "schema": 1,
+        "schema": 2,
         "meta": {
             "created_unix": int(time.time()),
             "jax": jax.__version__,
             "backend": jax.default_backend(),
             "platform": platform.platform(),
             "smoke": smoke, "full": full, "repeats": repeats,
+            "devices": devices,
         },
         "results": results,
         "gate": gate,
+        "gate_sharded": gate_sharded,
     }
     bad = [r for r in results if not r["agrees_bitwise"]]
     with open(out, "w") as f:
@@ -181,12 +270,17 @@ def run(smoke: bool = False, full: bool = False, repeats: int = 3,
         f.write("\n")
     print(f"\nwrote {len(results)} records to {out}")
     print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
+    if gate_sharded is not None:
+        print(f"gate[{gate_sharded['rule']}]: "
+              f"{'PASS' if gate_sharded['pass'] else 'FAIL'}")
     if bad:
         raise SystemExit(
             f"bitwise disagreement in {[(r['n'], r['engine']) for r in bad]}"
         )
     if not gate["pass"]:
         raise SystemExit("edges-relaxed gate failed")
+    if gate_sharded is not None and not gate_sharded["pass"]:
+        raise SystemExit("sharded edges-relaxed gate failed")
     return out
 
 
@@ -198,5 +292,9 @@ if __name__ == "__main__":
                     help="extend sparse corpus to the paper's n=40000")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--devices", type=int, default=_DEFAULT_DEVICES,
+                    help="mesh size for the sharded CSR engines (forced "
+                         "host device count on CPU); 1 drops the leg")
     args = ap.parse_args()
-    run(args.smoke, args.full, repeats=args.repeats, out=args.out)
+    run(args.smoke, args.full, repeats=args.repeats, out=args.out,
+        devices=args.devices)

@@ -15,7 +15,9 @@ import numpy as np
 import jax
 
 from repro.core import graph as G
-from repro.core.api import CSR_ENGINES, ENGINES, shortest_paths
+from repro.core._compat import make_mesh
+from repro.core.api import (CSR_ENGINES, ENGINES, SHARDED_CSR_ENGINES,
+                            shortest_paths)
 from repro.core.serial import dijkstra_serial_np
 
 
@@ -41,11 +43,10 @@ def main():
 
     # 3. every engine (sharded ones on a host mesh over available devices)
     n_dev = jax.device_count()
-    mesh = (jax.make_mesh((n_dev,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
-            if n_dev > 1 else None)
+    mesh = make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
     for engine in ENGINES:
-        if engine in ("dijkstra_sharded", "bellman_sharded") and mesh is None:
+        if (engine in ("dijkstra_sharded", "bellman_sharded")
+                + SHARDED_CSR_ENGINES and mesh is None):
             print(f"  {engine:18s}: skipped (single device; "
                   "run under XLA_FLAGS=--xla_force_host_platform_device_count=8)")
             continue
@@ -54,8 +55,8 @@ def main():
                else args.source)
         # CSR-native engines get the sparse container directly — no dense
         # matrix on their path at all.
-        arg_g = (cg if engine in CSR_ENGINES or engine == "multisource_csr"
-                 else g)
+        arg_g = (cg if engine in CSR_ENGINES + SHARDED_CSR_ENGINES
+                 or engine == "multisource_csr" else g)
         shortest_paths(arg_g, src, engine=engine, mesh=mesh)  # warmup/jit
         t0 = time.perf_counter()
         res = shortest_paths(arg_g, src, engine=engine, mesh=mesh)

@@ -1,0 +1,144 @@
+"""jax-version compatibility shim for the sharding API.
+
+The container pins jax 0.4.37, where ``shard_map`` lives in
+``jax.experimental.shard_map`` and the modern mesh helpers
+(``jax.set_mesh``, ``jax.sharding.AxisType``, ``lax.pvary``,
+``jax.sharding.get_abstract_mesh``) do not exist yet; CI also runs the
+latest jax, where the experimental import is gone and the modern names are
+canonical.  Every sharded engine, trainer, and test imports the sharding
+surface from here instead of from jax directly, so the same source runs on
+both — the 13 previously version-gated sharding tests included.
+
+Differences papered over:
+
+* ``shard_map``      — modern ``jax.shard_map`` (keyword mesh, optional —
+                       falls back to the ambient ``set_mesh`` mesh) vs the
+                       0.4.x functional form.  On 0.4.x we always pass
+                       ``check_rep=False``: the old replication checker has
+                       no rule for ``while`` (every fixpoint engine here
+                       loops) and the modern ``check_vma`` machinery it
+                       approximates doesn't exist anyway.
+* ``pvary``          — identity on 0.4.x.  The modern varying-manual-axes
+                       type system needs device-invariant loop carries
+                       marked varying; old jax has no such distinction.
+* ``make_mesh``      — drops the ``axis_types`` keyword: ``Auto`` is the
+                       modern default and the concept is absent on 0.4.x.
+* ``abstract_mesh``  — modern ``AbstractMesh(sizes, names)`` vs the 0.4.x
+                       ``AbstractMesh(((name, size), ...))`` tuple form.
+                       Both expose ``.axis_names`` and the ``.shape`` dict
+                       the sharding rules consume.
+* ``set_mesh`` /     — modern jax tracks an ambient abstract mesh; on
+  ``get_abstract_mesh``  0.4.x we keep our own stack (entering the concrete
+                       ``Mesh`` context manager too, so bare-PartitionSpec
+                       ``with_sharding_constraint`` keeps working inside
+                       jit).  A concrete Mesh duck-types the abstract one
+                       for every consumer here (``axis_names`` + ``shape``).
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import inspect
+
+import jax
+
+MODERN_SHARDING = hasattr(jax, "shard_map")
+
+if MODERN_SHARDING:
+    _check_kw = (
+        "check_vma"
+        if "check_vma" in inspect.signature(jax.shard_map).parameters
+        else "check_rep"
+    )
+else:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map_04x
+
+# ambient mesh stack for 0.4.x set_mesh / get_abstract_mesh
+_MESH_STACK: list = []
+
+
+def shard_map(f=None, *, mesh=None, in_specs, out_specs, check_vma=True):
+    """Version-portable ``shard_map``.
+
+    Usable exactly like the modern API, including as a decorator via
+    ``functools.partial(shard_map, mesh=..., in_specs=..., out_specs=...)``
+    and with ``mesh=None`` meaning "the ambient :func:`set_mesh` mesh".
+    ``check_vma`` is honored on modern jax and ignored (forced off) on
+    0.4.x — see module docstring.
+    """
+    if f is None:
+        return functools.partial(shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+    if MODERN_SHARDING:
+        kw = {_check_kw: check_vma}
+        if mesh is not None:
+            kw["mesh"] = mesh
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs, **kw)
+
+    @functools.wraps(f)
+    def call(*args):
+        m = mesh if mesh is not None else get_abstract_mesh()
+        if m is None:
+            raise ValueError(
+                "shard_map without an explicit mesh needs an ambient mesh: "
+                "wrap the call in repro.core._compat.set_mesh(mesh)")
+        return _shard_map_04x(f, mesh=m, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)(*args)
+
+    return call
+
+
+def pvary(x, axis_name):
+    """Mark ``x`` as varying over ``axis_name`` (identity on 0.4.x)."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_name)
+    return x
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with the Auto axis types both versions default to."""
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names),
+                         devices=devices)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """Device-less mesh for shape-only sharding decisions (rules tests,
+    spec assignment)."""
+    AM = jax.sharding.AbstractMesh
+    axis_shapes, axis_names = tuple(axis_shapes), tuple(axis_names)
+    if MODERN_SHARDING:
+        return AM(axis_shapes, axis_names)
+    return AM(tuple(zip(axis_names, axis_shapes)))
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    _MESH_STACK.append(mesh)
+    try:
+        with mesh:  # Mesh ctx: bare-spec with_sharding_constraint resolves
+            yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or None outside any :func:`set_mesh` context.
+
+    Modern jax returns its tracked abstract mesh; 0.4.x returns the
+    concrete mesh from our stack (same ``axis_names`` / ``shape`` surface).
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        try:
+            am = jax.sharding.get_abstract_mesh()
+        except Exception:
+            am = None
+        if am is not None and am.axis_names:
+            return am
+        # fall through: mid-vintage jax has get_abstract_mesh but no
+        # set_mesh, so the ambient mesh lives on our stack instead.
+    return _MESH_STACK[-1] if _MESH_STACK else None

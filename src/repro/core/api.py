@@ -17,6 +17,14 @@ Engines (paper §III):
                        per sweep (beyond-paper, core/frontier.py)
     frontier_kernel    same, Pallas candidate kernel (kernels/frontier_relax)
     multisource_csr    batched (S, n) fixpoint on CSR edges      (beyond-paper)
+    bellman_csr_sharded vertex-partitioned CSR fixpoint: O(m/P) local
+                       segment-min + 1 all-gather/sweep (beyond-paper,
+                       core/sharded_csr.py; needs a mesh)
+    frontier_sharded   vertex-partitioned frontier push: per sweep the
+                       devices exchange only the compacted (id, dist)
+                       frontier pairs — the MPI-message analogue — and
+                       each relaxes O(frontier arcs into its block)
+                       (beyond-paper, core/sharded_csr.py; needs a mesh)
 
 Choosing dense vs CSR vs frontier (the paper's Table I vs Table II
 trade-off, plus its §V "every edge, every sweep" complaint):
@@ -54,6 +62,25 @@ trade-off, plus its §V "every edge, every sweep" complaint):
     edge-index loads when solving many sources on one sparse graph.  Like
     ``multisource`` it returns ``pred=None``; :func:`recover_pred` rebuilds
     the predecessor rows on demand at O(m) per source.
+
+Dense vs sparse partitioning (the sharded engines' trade-off):
+    The dense sharded engines (``dijkstra_sharded``/``bellman_sharded``/
+    ``multisource``) split the O(n²) adjacency matrix into column slabs —
+    each device stores n²/P entries however sparse the graph, which is the
+    paper's own §V ceiling merely divided by P.  The CSR sharded engines
+    partition the *vertices* and give each device only the O(m/P) arcs
+    targeting its block (``CsrGraph.partitioned``), so sparse graphs shard
+    at sparse cost; the dense slabs remain the right choice only when the
+    matrix is the edge set (Table I density).  Within the CSR pair:
+    ``bellman_csr_sharded`` moves O(n) per sweep (the gathered distance
+    vector) and touches every local arc; ``frontier_sharded`` moves only
+    the compacted frontier pairs and touches only frontier arcs — wins
+    whenever frontiers are narrow (long-diameter sparse graphs), loses the
+    exchange overhead when the frontier is ~everything (dense diameter-2
+    graphs, where ``bellman_csr_sharded``'s single collective is cheaper).
+    Both report ``edges_relaxed``; benchmarks/run_bench.py gates
+    ``frontier_sharded`` at P=4 against single-device ``frontier`` (same
+    work, partitioned — each arc has exactly one owner).
 """
 from __future__ import annotations
 
@@ -87,6 +114,8 @@ ENGINES = (
     "frontier",
     "frontier_kernel",
     "multisource_csr",
+    "bellman_csr_sharded",
+    "frontier_sharded",
 )
 
 # single-source engines that consume CsrGraph operands natively (and return
@@ -94,6 +123,10 @@ ENGINES = (
 CSR_ENGINES = ("bellman_csr", "bellman_csr_kernel",
                "frontier", "frontier_kernel")
 FRONTIER_ENGINES = ("frontier", "frontier_kernel")
+# mesh-requiring engines on vertex-partitioned CSR blocks (core/sharded_csr)
+SHARDED_CSR_ENGINES = ("bellman_csr_sharded", "frontier_sharded")
+# every engine that consumes CsrGraph input without densifying it
+_CSR_NATIVE = CSR_ENGINES + ("multisource_csr",) + SHARDED_CSR_ENGINES
 
 
 @dataclasses.dataclass
@@ -131,7 +164,7 @@ def shortest_paths(
 
     if isinstance(g, csr_mod.CsrGraph):
         cg, n_true = g, g.n
-        if engine not in CSR_ENGINES and engine != "multisource_csr":
+        if engine not in _CSR_NATIVE:
             # dense engines need the matrix; O(n²), small-n convenience only.
             g = cg.to_dense()
     else:
@@ -142,6 +175,35 @@ def shortest_paths(
             n_true = adj_np.shape[0]
             g = graph_mod.Graph(adj=adj_np.astype(np.float32), n=n_true)
         cg = None
+
+    if engine in SHARDED_CSR_ENGINES:
+        if mesh is None:
+            raise ValueError(f"engine {engine!r} needs a mesh")
+        from repro.core._axes import axis_size
+        from repro.core.sharded_csr import (sssp_bellman_csr_sharded,
+                                            sssp_frontier_sharded)
+
+        if cg is None:
+            cg = g.to_csr()
+        parts = cg.partitioned(axis_size(mesh, axis))
+        if engine == "bellman_csr_sharded":
+            d, p, s = sssp_bellman_csr_sharded(
+                parts, source, mesh, axis=axis, max_sweeps=max_sweeps
+            )
+            # actual partitioned work: every owner sweeps its padded block.
+            edges = int(s) * parts.nprocs * parts.nnz_max
+            return SsspResult(np.asarray(d)[:n_true], np.asarray(p)[:n_true],
+                              int(s), engine, edges_relaxed=edges)
+        d, s, e = sssp_frontier_sharded(
+            parts, source, mesh, axis=axis, max_sweeps=max_sweeps
+        )
+        dist = jnp.asarray(d)[:n_true]
+        # fixpoint pred is a pure function of (dist, graph): reuse the O(m)
+        # single-device recovery, same tie-breaks as every other engine.
+        pred = predecessors_from_dist_csr(dist, csr_operands(cg),
+                                          jnp.int32(source))
+        return SsspResult(np.asarray(dist), np.asarray(pred), int(s), engine,
+                          edges_relaxed=int(e))
 
     if engine in FRONTIER_ENGINES:
         if cg is None:

@@ -39,6 +39,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core._axes import axis_size, axis_tuple
+from repro.core._compat import pvary, shard_map
 
 INF = jnp.inf
 
@@ -161,7 +162,7 @@ def sssp_bellman_sharded(
     cap = int(max_sweeps if max_sweeps is not None else n_pad)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(None, axis), P()),
         out_specs=(P(axis), P(axis), P()),
@@ -171,8 +172,8 @@ def sssp_bellman_sharded(
         v_base = my_p * loc_n
         dist0 = jnp.full((n_pad,), INF, adj_loc.dtype).at[src].set(0.0)
         # initial carries are device-invariant; body outputs are varying.
-        dist0 = lax.pvary(dist0, axis_tuple(axis))
-        prev0 = lax.pvary(jnp.full((n_pad,), -1.0, adj_loc.dtype), axis_tuple(axis))
+        dist0 = pvary(dist0, axis_tuple(axis))
+        prev0 = pvary(jnp.full((n_pad,), -1.0, adj_loc.dtype), axis_tuple(axis))
 
         def cond(c):
             dist, prev, it = c
@@ -186,7 +187,7 @@ def sssp_bellman_sharded(
             new = lax.all_gather(loc_new, axis, tiled=True)      # (n_pad,)
             return new, dist, it + 1
 
-        it0 = lax.pvary(jnp.int32(0), axis_tuple(axis))
+        it0 = pvary(jnp.int32(0), axis_tuple(axis))
         dist, _, sweeps = lax.while_loop(cond, body, (dist0, prev0, it0))
         # local pred for owned vertices, from the fixpoint dist.  Mask the
         # diagonal (global row v for local column v) so the argmin never

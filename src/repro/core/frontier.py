@@ -78,6 +78,52 @@ def frontier_operands(cg, *, with_ell: bool = False) -> dict:
     return ops
 
 
+def relax_edge_slots(nd, row_dist, starts, off, E, out_dst, out_w, *,
+                     chunk: int, drop_id):
+    """Scatter-min ``row_dist[row] + w`` over a compacted frontier's edge
+    slots, ``chunk`` slots per inner ``lax.while_loop`` step (trip count
+    tracks the actual slot count E, the stream-compaction core of the
+    frontier engines).
+
+    Shared by the single-device flat sweep (:func:`make_flat_sweep_fn`)
+    and the vertex-partitioned local relax (core/sharded_csr.py) — the
+    callers differ only in where the source distances come from (the
+    local ``dist`` snapshot vs the exchanged frontier pairs) and in the
+    scatter target space (global ids dropped at n vs block-local ids
+    dropped at loc_n, via ``drop_id``).
+
+    row_dist: (F,) source distance per frontier row; starts/off: each
+    row's window start in (out_dst, out_w) / exclusive cumsum of window
+    lengths; E: total slots; out-of-window slots produce INF candidates
+    aimed at ``drop_id`` (scatter mode="drop").
+    """
+    m = out_dst.shape[0]
+    if m == 0:                                    # edgeless graph: no work
+        return nd
+    F = row_dist.shape[0]
+
+    def cond(carry):
+        _, c = carry
+        return c * chunk < E
+
+    def body(carry):
+        nd2, c = carry
+        slots = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        valid = slots < E
+        # slot -> owning frontier row: last row whose window starts at
+        # or before the slot ('right' lands past zero-degree ties).
+        row = jnp.searchsorted(off, slots, side="right") - 1
+        row = jnp.clip(row, 0, F - 1)
+        pos = starts[row] + (slots - off[row])
+        pos = jnp.clip(pos, 0, m - 1)
+        cand = jnp.where(valid, row_dist[row] + out_w[pos], INF)
+        tgt = jnp.where(valid, out_dst[pos], drop_id)
+        return nd2.at[tgt].min(cand, mode="drop"), c + 1
+
+    nd, _ = lax.while_loop(cond, body, (nd, jnp.int32(0)))
+    return nd
+
+
 @functools.lru_cache(maxsize=None)
 def make_flat_sweep_fn(chunk: int = 1024) -> Callable:
     """Default frontier sweep: flat-CSR edge windows, ``chunk`` edge slots
@@ -95,31 +141,11 @@ def make_flat_sweep_fn(chunk: int = 1024) -> Callable:
 
     def sweep(dist, fids, starts, off, E, fcount, ops):
         n = dist.shape[0]
-        m = ops["out_dst"].shape[0]
-        if m == 0:                                # edgeless graph: no work
-            return dist
-
-        def cond(carry):
-            _, c = carry
-            return c * chunk < E
-
-        def body(carry):
-            nd, c = carry
-            slots = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
-            valid = slots < E
-            # slot -> owning frontier row: last row whose window starts at
-            # or before the slot ('right' lands past zero-degree ties).
-            row = jnp.searchsorted(off, slots, side="right") - 1
-            row = jnp.clip(row, 0, n - 1)
-            pos = starts[row] + (slots - off[row])
-            pos = jnp.clip(pos, 0, m - 1)
-            u = jnp.minimum(fids[row], n - 1)
-            cand = jnp.where(valid, dist[u] + ops["out_w"][pos], INF)
-            tgt = jnp.where(valid, ops["out_dst"][pos], n)   # n -> dropped
-            return nd.at[tgt].min(cand, mode="drop"), c + 1
-
-        nd, _ = lax.while_loop(cond, body, (dist, jnp.int32(0)))
-        return nd
+        row_dist = dist[jnp.minimum(fids, n - 1)]   # sentinel rows: 0 slots
+        return relax_edge_slots(
+            dist, row_dist, starts, off, E, ops["out_dst"], ops["out_w"],
+            chunk=chunk, drop_id=jnp.int32(n),
+        )
 
     return sweep
 

@@ -22,6 +22,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core._axes import axis_size, axis_tuple
+from repro.core._compat import pvary, shard_map
 
 INF = jnp.inf
 
@@ -85,7 +86,7 @@ def sssp_multisource_sharded(
     cap = int(max_sweeps if max_sweeps is not None else n_pad)
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(None, axis), P()),
         out_specs=(P(None, axis), P()),
@@ -93,8 +94,8 @@ def sssp_multisource_sharded(
     def run(adj_loc, srcs):
         my_p = lax.axis_index(axis)
         v_base = my_p * loc_n
-        D0 = lax.pvary(init_dist(n_pad, srcs, adj_loc.dtype), axis_tuple(axis))
-        prev0 = lax.pvary(jnp.full((s, n_pad), -1.0, adj_loc.dtype), axis_tuple(axis))
+        D0 = pvary(init_dist(n_pad, srcs, adj_loc.dtype), axis_tuple(axis))
+        prev0 = pvary(jnp.full((s, n_pad), -1.0, adj_loc.dtype), axis_tuple(axis))
 
         def cond(c):
             D, prev, it = c
@@ -109,7 +110,7 @@ def sssp_multisource_sharded(
             new = lax.all_gather(loc_new, axis, axis=1, tiled=True)
             return new, D, it + 1
 
-        it0 = lax.pvary(jnp.int32(0), axis_tuple(axis))
+        it0 = pvary(jnp.int32(0), axis_tuple(axis))
         D, _, sweeps = lax.while_loop(cond, body, (D0, prev0, it0))
         mine = lax.dynamic_slice_in_dim(D, v_base, loc_n, axis=1)
         return mine, lax.psum(sweeps, axis) // nprocs

@@ -7,7 +7,8 @@ per iteration does: local argmin over the unvisited owned vertices, a global
 the winning vertex's row; results are reassembled with ``MPI_Gather``.
 
 TPU/JAX mapping (see DESIGN.md §2):
-  * processes            -> mesh devices along one axis, via jax.shard_map
+  * processes            -> mesh devices along one axis, via the
+                            version-portable shard_map (core/_compat.py)
   * column partition     -> in_specs P(None, axis) on the padded adjacency
   * MPI_Allreduce MINLOC -> minloc_allgather (baseline: one lax.all_gather of
                             P (dist, index) candidates + deterministic argmin)
@@ -25,6 +26,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.core._axes import axis_size, axis_tuple
+from repro.core._compat import pvary, shard_map
 
 INF = jnp.inf
 
@@ -107,7 +109,7 @@ def dijkstra_sharded(
     minloc_fn = _MINLOC[minloc]
 
     @functools.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(None, axis), P()),
         out_specs=(P(axis), P(axis)),
@@ -121,8 +123,8 @@ def dijkstra_sharded(
         loc_dist = jnp.where(owned == src, 0.0, INF).astype(adj_loc.dtype)
         # pvary: mark the device-invariant initial carries as axis-varying so
         # the fori_loop carry types match the (varying) body outputs.
-        loc_pred = lax.pvary(jnp.full((loc_n,), -1, jnp.int32), axis_tuple(axis))
-        loc_visited = lax.pvary(jnp.zeros((loc_n,), jnp.bool_), axis_tuple(axis))
+        loc_pred = pvary(jnp.full((loc_n,), -1, jnp.int32), axis_tuple(axis))
+        loc_visited = pvary(jnp.zeros((loc_n,), jnp.bool_), axis_tuple(axis))
 
         def body(_, carry):
             loc_dist, loc_pred, loc_visited = carry

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.configs import LONG_CONTEXT_ARCHS, SHAPES, ARCHS, get_config
 from repro.launch import hlo_analysis as H
+from repro.core._compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
 
@@ -148,7 +149,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
 
     # set_mesh (not just `with mesh:`) so in-model with_sharding_constraint
     # activation rules see the ambient abstract mesh during tracing.
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
                          out_shardings=cell.out_shardings)
         lowered = jitted.lower(*cell.args)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, LONG_CONTEXT_ARCHS, SHAPES, get_config
+from repro.core._compat import set_mesh
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import default_grad_accum, default_opt_config
 from repro.models import transformer as T
@@ -93,7 +94,7 @@ def main():
     hdr = (f"{'arch':24s} {'shape':12s} {'params':>8s} {'opt+grad':>9s} "
            f"{'cache':>7s} {'activ':>7s} {'total':>7s}  fits")
     print(hdr)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for arch in ARCHS:
             for sh in SHAPES:
                 if sh == "long_500k" and arch not in LONG_CONTEXT_ARCHS:

@@ -31,7 +31,8 @@ def main(argv=None):
                              "bellman_kernel", "bellman_sharded",
                              "multisource", "bellman_csr",
                              "bellman_csr_kernel", "frontier",
-                             "frontier_kernel", "multisource_csr"])
+                             "frontier_kernel", "multisource_csr",
+                             "bellman_csr_sharded", "frontier_sharded"])
     ap.add_argument("--nodes", type=int, default=1000)
     ap.add_argument("--edges", type=int, default=3000)
     ap.add_argument("--procs", type=int, default=1)
@@ -45,18 +46,25 @@ def main(argv=None):
     ap.add_argument("--verify", action="store_true")
     args = ap.parse_args(argv)
 
-    import jax
+    from repro.core import csr as C
     from repro.core import graph as G
-    from repro.core.api import shortest_paths
+    from repro.core._compat import make_mesh
+    from repro.core.api import SHARDED_CSR_ENGINES, shortest_paths
     from repro.core.serial import dijkstra_serial_np
 
-    g = G.random_graph(args.nodes, args.edges, seed=args.seed,
-                       directed=args.directed)
+    csr_native = args.engine in SHARDED_CSR_ENGINES
+    if csr_native:
+        # --procs for the CSR engines: same flag, sparse partition — no
+        # dense matrix is ever built, so n can go far beyond the dense cap.
+        g = C.random_csr_graph(args.nodes, args.edges, seed=args.seed,
+                               directed=args.directed)
+    else:
+        g = G.random_graph(args.nodes, args.edges, seed=args.seed,
+                           directed=args.directed)
     mesh = None
-    if args.engine in ("dijkstra_sharded", "bellman_sharded", "multisource"):
-        mesh = jax.make_mesh(
-            (max(args.procs, 1),), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+    if args.engine in ("dijkstra_sharded", "bellman_sharded",
+                       "multisource") + SHARDED_CSR_ENGINES:
+        mesh = make_mesh((max(args.procs, 1),), ("data",))
 
     source = (np.arange(args.sources) % args.nodes
               if args.engine in ("multisource", "multisource_csr")
@@ -76,7 +84,8 @@ def main(argv=None):
              if res.edges_relaxed is not None else ""))
 
     if args.verify:
-        ref, _ = dijkstra_serial_np(g.adj, args.source)
+        adj = g.to_dense().adj if csr_native else g.adj   # O(n²): verify only
+        ref, _ = dijkstra_serial_np(adj, args.source)
         got = res.dist[0] if res.dist.ndim == 2 else res.dist
         ok = np.allclose(np.where(np.isfinite(ref), ref, 1e30),
                          np.where(np.isfinite(got), got, 1e30), rtol=1e-5)

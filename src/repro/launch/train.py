@@ -56,6 +56,7 @@ def main(argv=None):
                          "gradient compression")
     args = ap.parse_args(argv)
 
+    from repro.core._compat import set_mesh
     from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
     from repro.configs import get_config, make_smoke
     from repro.data.pipeline import DataConfig, SyntheticPipeline
@@ -83,7 +84,7 @@ def main(argv=None):
     # ---- init or restore -------------------------------------------------
     start_step = 0
     state_shape = train_state_shape(cfg, opt_cfg)
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
             shardings = jax.tree.map(
                 lambda l: rules.replicated(mesh), state_shape,
@@ -116,8 +117,14 @@ def main(argv=None):
         for step_idx in range(start_step, args.steps):
             if (args.simulate_failure_at is not None
                     and step_idx == args.simulate_failure_at):
-                # save nothing: the point is recovering from the last
-                # periodic checkpoint.
+                # save nothing NEW: the point is recovering from the last
+                # periodic checkpoint.  Do drain the in-flight async write
+                # first — the injection tests restart determinism, not
+                # mid-write interruption (test_tmp_dirs_never_visible covers
+                # that separately), and otherwise whether the periodic save
+                # landed depends on a disk-vs-step-time race.
+                if ckpt:
+                    ckpt.wait()
                 raise RuntimeError(
                     f"[train] simulated node failure at step {step_idx}")
             batch = {k: jnp.asarray(v) for k, v in

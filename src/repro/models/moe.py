@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.models import common as cm
 from repro.models.mlp import init_mlp, mlp
+from repro.core._compat import get_abstract_mesh, shard_map as _shard_map
 from repro.sharding.rules import constrain, dp_size
 
 
@@ -86,13 +87,7 @@ def moe(p, x, cfg):
 
 
 def _ambient_mesh():
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return None
-    if am is None or not am.axis_names:
-        return None
-    return am
+    return get_abstract_mesh()
 
 
 def moe_gspmd(p, x, cfg):
@@ -196,7 +191,7 @@ def moe_ep(p, x, cfg, am):
                 None, None)
 
     @_ft.partial(
-        jax.shard_map,
+        _shard_map,
         in_specs=(x_spec, _P(), _P("model"), _P("model"), _P("model")),
         out_specs=(x_spec, _P()),
         check_vma=False,

@@ -23,6 +23,8 @@ from typing import Any, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding
+
+from repro.core._compat import get_abstract_mesh
 from jax.sharding import PartitionSpec as P
 
 
@@ -219,10 +221,7 @@ _ACT_RULES: dict[str, list[list[str]]] = {
 
 def dp_size() -> int:
     """Size of the ambient mesh's data-parallel axes (1 off-mesh)."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return 1
+    am = get_abstract_mesh()
     if am is None or not am.axis_names:
         return 1
     return math.prod(am.shape[a] for a in ("pod", "data")
@@ -231,10 +230,7 @@ def dp_size() -> int:
 
 def tp_size() -> int:
     """Size of the ambient mesh's model axis (1 off-mesh)."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return 1
+    am = get_abstract_mesh()
     if am is None or "model" not in am.axis_names:
         return 1
     return am.shape["model"]
@@ -243,10 +239,7 @@ def tp_size() -> int:
 def constrain(x, rule: str):
     """with_sharding_constraint against the ambient mesh; no-op outside a
     mesh context (keeps model code mesh-agnostic — smoke tests run as-is)."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return x
+    am = get_abstract_mesh()
     if am is None or not am.axis_names:
         return x
     prefs = _ACT_RULES[rule]

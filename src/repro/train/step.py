@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.core._compat import shard_map
 from repro.models import transformer as T
 from repro.train import compression as comp
 from repro.train.optimizer import OptConfig, adamw_update
@@ -73,7 +74,7 @@ def make_ddp_train_step(cfg, opt_cfg: OptConfig, mesh, *, axis: str = "data",
     """Explicit-DP step over ``mesh[axis]`` with int8 EF compression."""
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(), P(), P(), P(axis)),
         out_specs=(P(), P(), P(), P()),
         check_vma=False,

@@ -8,23 +8,11 @@ import heapq
 import numpy as np
 import pytest
 
-try:
-    import jax
-
-    # The sharded engines / training substrate target the modern sharding
-    # API (jax.shard_map, lax.pvary, sharding.AxisType, the keyword
-    # AbstractMesh).  On containers pinned to an older CPU jax those tests
-    # skip rather than fail; nothing is installed to work around it.
-    HAVE_MODERN_JAX_SHARDING = hasattr(jax, "shard_map") and hasattr(
-        jax.sharding, "AxisType"
-    )
-except ImportError:                                   # pragma: no cover
-    HAVE_MODERN_JAX_SHARDING = False
-
-requires_modern_jax_sharding = pytest.mark.skipif(
-    not HAVE_MODERN_JAX_SHARDING,
-    reason="needs jax.shard_map / jax.sharding.AxisType (newer jax)",
-)
+# NOTE: the old ``requires_modern_jax_sharding`` gate is gone — the sharded
+# engines, training substrate, and their tests all go through
+# repro.core._compat now, which provides shard_map / set_mesh /
+# make_mesh / abstract_mesh on both the pinned jax 0.4.37 and modern jax,
+# so those 13 tests run everywhere.
 
 
 @pytest.fixture

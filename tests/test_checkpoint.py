@@ -6,8 +6,6 @@ import shutil
 import numpy as np
 import pytest
 
-from conftest import requires_modern_jax_sharding
-
 import jax
 import jax.numpy as jnp
 
@@ -71,12 +69,11 @@ def test_shape_mismatch_raises(tmp_path):
         restore_checkpoint(str(tmp_path), bad)
 
 
-@requires_modern_jax_sharding
 def test_restore_with_shardings(tmp_path):
     """Reshard-on-load: restore with explicit NamedShardings."""
+    from repro.core._compat import make_mesh
     from repro.sharding import rules
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     st = _state()
     save_checkpoint(str(tmp_path), st, 3)
     shape = jax.eval_shape(lambda: _state())

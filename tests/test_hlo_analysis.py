@@ -2,8 +2,6 @@
 import numpy as np
 import pytest
 
-from conftest import requires_modern_jax_sharding
-
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -98,15 +96,15 @@ def test_roofline_terms_and_dominant():
         (H.PEAK_FLOPS * 2) / (4 * H.PEAK_FLOPS * 2.0))
 
 
-@requires_modern_jax_sharding
 def test_collectives_counted_in_spmd_module():
     """A psum inside shard_map lowers to all-reduce ops we must count."""
     import functools
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("data"),
+    from repro.core._compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("data",))
+
+    @functools.partial(shard_map, mesh=mesh, in_specs=P("data"),
                        out_specs=P())
     def f(x):
         return lax.psum(x, "data")

@@ -13,8 +13,6 @@ import sys
 import numpy as np
 import pytest
 
-from conftest import requires_modern_jax_sharding
-
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
@@ -35,14 +33,14 @@ def _run(code=None, module=None, args=(), devices=1, env=None, timeout=600):
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_sharded_engines_multidevice_match_oracle():
     code = """
 import jax, numpy as np, jax.numpy as jnp
 from repro.core import graph as G
 from repro.core.api import shortest_paths
 from repro.core.serial import dijkstra_serial_np
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core._compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 g = G.random_graph(103, 400, seed=5)
 ref, _ = dijkstra_serial_np(g.adj, 4)
 for engine in ("dijkstra_sharded", "bellman_sharded"):
@@ -61,14 +59,14 @@ print("MULTIDEVICE_OK")
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_minloc_variants_agree_multidevice():
     code = """
 import jax, numpy as np, jax.numpy as jnp
 from repro.core import graph as G
 from repro.core.sharded import dijkstra_sharded
 from repro.core.serial import dijkstra_serial_np
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core._compat import make_mesh
+mesh = make_mesh((8,), ("data",))
 g = G.random_graph(96, 380, seed=8).padded(8)
 ref, _ = dijkstra_serial_np(g.adj, 0)
 for impl in ("allgather", "pmin", "packed"):
@@ -83,7 +81,6 @@ print("MINLOC_OK")
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_failure_injection_restart_is_bit_identical(tmp_path):
     """Train 20 steps clean; train with a crash at step 12 + restart; the
     post-restart losses must match the uninterrupted run exactly."""
@@ -112,7 +109,6 @@ def test_failure_injection_restart_is_bit_identical(tmp_path):
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_ddp_compressed_trainer_multidevice():
     code = """
 import jax, jax.numpy as jnp
@@ -123,7 +119,8 @@ from repro.train.optimizer import OptConfig, init_opt_state
 from repro.train import compression as comp
 cfg = make_smoke(get_config("qwen1.5-0.5b"))
 opt = OptConfig(lr=1e-3, warmup_steps=1, total_steps=30)
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core._compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 key = jax.random.PRNGKey(0)
 st = init_train_state(key, cfg, opt)
 batch = {"tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
@@ -151,7 +148,6 @@ def test_serve_driver_runs():
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_sssp_run_driver_scaling_procs():
     r = _run(module="repro.launch.sssp_run",
              args=["--engine", "dijkstra_sharded", "--procs", "4",
@@ -162,7 +158,6 @@ def test_sssp_run_driver_scaling_procs():
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_elastic_restore_across_meshes(tmp_path):
     """Checkpoint on 1 device, restore on an 8-device mesh (reshard-on-load)."""
     ck = str(tmp_path / "ck")
@@ -181,7 +176,6 @@ def test_elastic_restore_across_meshes(tmp_path):
 
 
 @pytest.mark.slow
-@requires_modern_jax_sharding
 def test_moe_ep_shard_map_matches_gspmd():
     """The explicit expert-parallel shard_map MoE must produce the same
     outputs as the GSPMD grouped path (same routing, same capacity
@@ -192,11 +186,11 @@ from repro.configs import get_config, make_smoke
 from repro.models.moe import init_moe, moe
 cfg = dataclasses.replace(make_smoke(get_config("qwen2-moe-a2.7b")),
                           expert_pad_to=8)
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core._compat import make_mesh, set_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 p = init_moe(jax.random.PRNGKey(0), cfg)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     cfg_g = dataclasses.replace(cfg, moe_impl="gspmd")
     cfg_e = dataclasses.replace(cfg, moe_impl="ep")
     out_g, aux_g = jax.jit(lambda p, x: moe(p, x, cfg_g))(p, x)

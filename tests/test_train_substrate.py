@@ -4,13 +4,12 @@ import dataclasses
 import numpy as np
 import pytest
 
-from conftest import requires_modern_jax_sharding
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, make_smoke
+from repro.core._compat import abstract_mesh
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.sharding import rules
 from repro.train import compression as comp
@@ -105,16 +104,15 @@ def test_quantize_roundtrip_error_bound():
     assert err.max() <= float(s) * 0.5 + 1e-6
 
 
-@requires_modern_jax_sharding
 def test_error_feedback_preserves_signal():
     """Sum of dequantized transmissions + final error == sum of inputs
     (error feedback never loses gradient mass)."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core._compat import make_mesh, shard_map
+    mesh = make_mesh((1,), ("data",))
     import functools
     from jax.sharding import PartitionSpec as P
 
-    @functools.partial(jax.shard_map, mesh=mesh, in_specs=(P(), P()),
+    @functools.partial(shard_map, mesh=mesh, in_specs=(P(), P()),
                        out_specs=(P(), P()), check_vma=False)
     def one_round(g, e):
         return comp.compressed_mean(g, e, "data")
@@ -160,9 +158,8 @@ def test_data_per_host_sharding():
 # sharding rules
 # ---------------------------------------------------------------------------
 
-@requires_modern_jax_sharding
 def test_assign_spec_divisibility_fallback():
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     # divisible -> assigned
     assert rules.assign_spec((8, 16), [["dp"], ["tp"]], mesh) == P("data", "model")
     # first dim indivisible -> dropped, second still assigned
@@ -171,10 +168,9 @@ def test_assign_spec_divisibility_fallback():
     assert rules.assign_spec((8, 8), [["tp"], ["tp"]], mesh) == P("model", None)
 
 
-@requires_modern_jax_sharding
 def test_param_rules_moe_fallback():
     # production model axis is 16-way: 60 experts are indivisible
-    mesh = jax.sharding.AbstractMesh((2, 16), ("data", "model"))
+    mesh = abstract_mesh((2, 16), ("data", "model"))
     # 60 experts indivisible by 16 -> ff gets the model axis
     import jax.tree_util as jtu
     path = (jtu.DictKey("segments"), jtu.SequenceKey(0), jtu.SequenceKey(0),
@@ -186,9 +182,8 @@ def test_param_rules_moe_fallback():
     assert spec == P(None, "model", "data", None)
 
 
-@requires_modern_jax_sharding
 def test_cache_spec_long_context_batch1():
-    mesh = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh = abstract_mesh((2, 4), ("data", "model"))
     # (rep, B=1, S, KV, hd): B unshardable -> S takes dp, KV takes tp
     spec = rules.cache_spec((26, 1, 1024, 4, 256), mesh)
     assert spec == P(None, None, "data", "model", None)
