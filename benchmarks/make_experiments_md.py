@@ -1,7 +1,8 @@
-"""Assemble EXPERIMENTS.md §Dry-run, §Roofline, §SSSP-bench, and
-§Weak-scaling tables from the dry-run JSON records, BENCH_sssp.json, and
-experiments/bench/weak_scaling.csv (single sources of truth), leaving
-hand-written sections (§Paper, §Perf) intact via marker comments.
+"""Assemble EXPERIMENTS.md §Dry-run, §Roofline, §SSSP-bench, §Serve-bench,
+and §Weak-scaling tables from the dry-run JSON records, BENCH_sssp.json,
+BENCH_serve.json, and experiments/bench/weak_scaling.csv (single sources
+of truth), leaving hand-written sections (§Paper, §Perf) intact via marker
+comments.
 
     PYTHONPATH=src python -m benchmarks.make_experiments_md
 """
@@ -16,6 +17,7 @@ from benchmarks.common import OUT_DIR, REPO
 
 DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
 BENCH_JSON = os.path.join(REPO, "BENCH_sssp.json")
+SERVE_JSON = os.path.join(REPO, "BENCH_serve.json")
 WEAK_CSV = os.path.join(OUT_DIR, "weak_scaling.csv")
 MD = os.path.join(REPO, "EXPERIMENTS.md")
 
@@ -120,6 +122,40 @@ def bench_tables(path: str) -> str:
     return "\n".join(rows)
 
 
+def serve_table(path: str) -> str:
+    """BENCH_serve.json (benchmarks/serve_bench.py) -> per-scenario
+    serving table plus the throughput/cache gate summary."""
+    with open(path) as f:
+        doc = json.load(f)
+    meta = doc["meta"]
+    rows = [f"jax {meta['jax']} on {meta['backend']}"
+            f"{' (smoke)' if meta.get('smoke') else ''}; closed-loop "
+            f"drains, {meta['max_batch']} max distinct sources/tick, "
+            f"{meta['landmarks']} landmarks, {meta['cache_rows']}-row "
+            "cache; cold = first trace, steady = second trace over the "
+            "same Zipf hot set; sequential = one fresh frontier solve "
+            "per query.",
+            "",
+            "| scenario | n | queries | cold q/s | steady q/s "
+            "| sequential q/s | steady speedup | steady hit rate "
+            "| occupancy | dedup saved |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in doc["results"]:
+        rows.append(
+            f"| {r['scenario']} | {r['n']} | {r['queries_per_trace']} "
+            f"| {r['batched_cold_qps']} | {r['batched_steady_qps']} "
+            f"| {r['sequential_qps']} | {r['speedup_steady']}x "
+            f"| {r['steady_cache_hit_rate']} | {r['mean_occupancy']} "
+            f"| {r['dedup_saved']} |")
+    gate = doc["gate"]
+    rows += ["", f"**Gate** ({gate['rule']}): "
+                 f"{'PASS' if gate['pass'] else 'FAIL'} — zipf steady "
+                 f"speedup {gate['zipf_speedup_steady']}x (min "
+                 f"{gate['min_ratio']}x), steady cache hit rate "
+                 f"{gate['zipf_steady_cache_hit_rate']}"]
+    return "\n".join(rows)
+
+
 def weak_scaling_table(path: str) -> str:
     """experiments/bench/weak_scaling.csv (benchmarks/weak_scaling.py) ->
     fixed-n/proc scaling table: dense column slabs vs the vertex-
@@ -154,12 +190,15 @@ def main():
         text = splice(text, "roofline", roofline_table(recs))
     if os.path.exists(BENCH_JSON):
         text = splice(text, "sssp-bench", bench_tables(BENCH_JSON))
+    if os.path.exists(SERVE_JSON):
+        text = splice(text, "serve-bench", serve_table(SERVE_JSON))
     if os.path.exists(WEAK_CSV):
         text = splice(text, "weak-scaling", weak_scaling_table(WEAK_CSV))
     with open(MD, "w") as f:
         f.write(text)
     print(f"wrote tables for {len(recs)} dry-run records"
           f"{' + SSSP bench' if os.path.exists(BENCH_JSON) else ''}"
+          f"{' + serve bench' if os.path.exists(SERVE_JSON) else ''}"
           f"{' + weak scaling' if os.path.exists(WEAK_CSV) else ''}"
           f" into {MD}")
 

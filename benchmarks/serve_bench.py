@@ -1,0 +1,212 @@
+"""Tracked serving benchmark gate — batched serving vs per-query solving.
+
+Replays the three synthetic workload scenarios (repro/serve/workload.py)
+through the serving subsystem in closed loop (submit everything, drain)
+and measures queries/s, then replays the SAME trace sequentially — one
+fresh ``frontier`` engine solve per query, no dedup, no cache, no
+batching, which is what the repo could do before the serve layer existed
+— and writes the comparison to ``BENCH_serve.json``.
+
+The ``gate`` section asserts, on the largest Zipf point:
+
+* batched-serving queries/s >= ``min_ratio`` x sequential per-query
+  solving (1.5x at the full n=10000 scale; 1.0x for smoke-sized corpora
+  where fixed overheads dominate), and
+* the distance cache actually hits on the skewed scenario (hit rate > 0)
+  — the workload property the whole cache exists for.
+
+Correctness rides along like run_bench.py: every served answer on the
+verified points is checked bitwise against a fresh ``serial`` solve.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+                                                    [--out PATH]
+
+Spliced into EXPERIMENTS.md by benchmarks/make_experiments_md.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import REPO
+from repro.core import csr as C
+from repro.core.api import shortest_paths
+from repro.serve import (DistanceCache, GraphRegistry, MicroBatchScheduler,
+                         SCENARIOS, make_trace)
+
+DEFAULT_OUT = os.path.join(REPO, "BENCH_serve.json")
+
+# scenario trace parameters (rate only shapes arrival stamps; both sides
+# replay closed-loop so the comparison is pure service throughput)
+RATE = 1000.0
+LANDMARKS = 8
+MAX_BATCH = 16
+CACHE_ROWS = 256
+
+
+def _make_scheduler(cg):
+    """Serving stack for one graph with the jit cache pre-warmed (one
+    compile per source-bucket size a drain can hit, plus the target
+    early-exit path with and without a landmark bound) — compiles stay
+    outside the timed windows, as run_bench.py does."""
+    import jax.numpy as jnp
+
+    from repro.core.bellman_csr import sssp_multisource_csr
+    from repro.core.frontier import sssp_frontier
+
+    registry = GraphRegistry()
+    cache = DistanceCache(capacity=CACHE_ROWS)
+    sched = MicroBatchScheduler(registry, cache, max_batch=MAX_BATCH)
+    handle = registry.register("g", cg, landmarks=LANDMARKS)
+    b = 1
+    while True:
+        sssp_multisource_csr(handle.csr_ops(),
+                             jnp.zeros((b,), jnp.int32), n=cg.n)
+        if b >= MAX_BATCH:
+            break
+        b *= 2
+    sssp_frontier(handle.frontier_ops(), jnp.int32(0), n=cg.n,
+                  target=jnp.int32(1), target_lb=jnp.float32(0.0))
+    sssp_frontier(handle.frontier_ops(), jnp.int32(0), n=cg.n,
+                  target=jnp.int32(1))
+    return sched
+
+
+def _drain_timed(sched, events, cg, *, verify: bool):
+    """Submit + drain one trace closed-loop; returns (qps, hit_rate over
+    this drain only)."""
+    h0, m0 = sched.cache.hits, sched.cache.misses
+    t0 = time.perf_counter()
+    for e in events:
+        sched.submit("g", e.source, e.target, arrival=e.arrival)
+    answers = sched.drain()
+    dt = time.perf_counter() - t0
+    if verify:
+        _verify(cg, answers)
+    probes = (sched.cache.hits - h0) + (sched.cache.misses - m0)
+    hit_rate = (sched.cache.hits - h0) / probes if probes else 0.0
+    return len(events) / dt, hit_rate
+
+
+def _replay_sequential(cg, events):
+    """The pre-serve baseline: one fresh frontier solve per query, in
+    trace order — no dedup, no cache, no batching.  Point-to-point
+    queries index the solved row (no target early exit — that
+    optimization belongs to the serving layer under test)."""
+    shortest_paths(cg, 0, engine="frontier")               # warm jit
+    t0 = time.perf_counter()
+    for e in events:
+        res = shortest_paths(cg, e.source, engine="frontier")
+        _ = res.dist if e.target is None else float(res.dist[e.target])
+    return len(events) / (time.perf_counter() - t0)
+
+
+def _verify(cg, answers):
+    rows = {}
+    for a in answers:
+        q = a.query
+        if q.source not in rows:
+            rows[q.source] = shortest_paths(cg, q.source,
+                                            engine="serial").dist
+        ref = rows[q.source]
+        if q.target is None:
+            ok = np.array_equal(a.value, ref)
+        else:
+            got, want = np.float32(a.value), ref[q.target]
+            ok = got == want or (np.isinf(got) and np.isinf(want))
+        if not ok:
+            raise SystemExit(
+                f"served answer mismatch vs serial: {q} via {a.via}")
+
+
+def run(smoke: bool = False, out: str = DEFAULT_OUT) -> str:
+    n = 1000 if smoke else 10000
+    queries = 120 if smoke else 400
+    verify = smoke or n <= 2000       # serial verify is O(n^2)/row: cap it
+    cg = C.random_csr_graph(n, 3 * n, seed=n)
+    records = []
+    for scen in SCENARIOS:
+        # two traces per scenario, different event seeds but a SHARED
+        # Zipf hot set (hot_seed): the first drain is the cold start, the
+        # second measures the steady serving state where the hot rows are
+        # already cached — the repeat-query regime of arXiv:1505.05033.
+        cold_trace = make_trace(scen, [("g", n)], num_queries=queries,
+                                rate=RATE, seed=7, hot_seed=13)
+        steady_trace = make_trace(scen, [("g", n)], num_queries=queries,
+                                  rate=RATE, seed=8, hot_seed=13)
+        sched = _make_scheduler(cg)
+        qps_cold, _ = _drain_timed(sched, cold_trace, cg, verify=verify)
+        qps_steady, hit_steady = _drain_timed(sched, steady_trace, cg,
+                                              verify=verify)
+        qps_s = _replay_sequential(cg, steady_trace)
+        stats = sched.stats()
+        rec = {
+            "scenario": scen, "n": n, "m": 3 * n,
+            "queries_per_trace": queries,
+            "batched_cold_qps": round(qps_cold, 2),
+            "batched_steady_qps": round(qps_steady, 2),
+            "sequential_qps": round(qps_s, 2),
+            "speedup_steady": round(qps_steady / qps_s, 3),
+            "speedup_cold": round(qps_cold / qps_s, 3),
+            "steady_cache_hit_rate": round(hit_steady, 4),
+            "mean_occupancy": stats["mean_occupancy"],
+            "dedup_saved": stats["dedup_saved"],
+            "answered_via": stats["answered_via"],
+            "verified_bitwise": verify,
+        }
+        records.append(rec)
+        print(f"  {scen:8s} n={n}: batched cold {qps_cold:8.1f} / steady "
+              f"{qps_steady:8.1f} q/s, sequential {qps_s:7.1f} q/s "
+              f"({rec['speedup_steady']:.2f}x steady), steady hit rate "
+              f"{hit_steady:.2f}", flush=True)
+
+    zipf = next(r for r in records if r["scenario"] == "zipf")
+    min_ratio = 1.5 if n >= 10000 else 1.0
+    gate = {
+        "rule": (f"steady-state batched serving >= {min_ratio}x sequential "
+                 f"per-query frontier solves on the Zipf trace at n={n}, "
+                 f"and the distance cache hits on the skewed scenario"),
+        "zipf_speedup_steady": zipf["speedup_steady"],
+        "min_ratio": min_ratio,
+        "zipf_steady_cache_hit_rate": zipf["steady_cache_hit_rate"],
+        "pass": bool(zipf["speedup_steady"] >= min_ratio
+                     and zipf["steady_cache_hit_rate"] > 0),
+    }
+    doc = {
+        "schema": 1,
+        "meta": {
+            "created_unix": int(time.time()),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "smoke": smoke,
+            "rate": RATE, "landmarks": LANDMARKS,
+            "max_batch": MAX_BATCH, "cache_rows": CACHE_ROWS,
+        },
+        "results": records,
+        "gate": gate,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"\nwrote {len(records)} scenario records to {out}")
+    print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
+    if not gate["pass"]:
+        raise SystemExit("serving throughput gate failed")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized corpus (n=1000, short traces)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(args.smoke, out=args.out)

@@ -3,6 +3,7 @@ for any assigned architecture (smoke scale on CPU), reporting latency and
 throughput — the decode path here is the exact code lowered by the
 decode_32k / long_500k dry-run cells.
 
+    PYTHONPATH=src python examples/serve_batch.py            # gemma2-2b
     PYTHONPATH=src python examples/serve_batch.py --arch zamba2-2.7b
 """
 import sys

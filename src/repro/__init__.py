@@ -1,0 +1,8 @@
+"""JAX/Pallas reproduction + extension of "High-Performance
+Parallelization of Dijkstra's Algorithm Using MPI and CUDA".
+
+Subpackages: ``core`` (SSSP engines + graph containers), ``kernels``
+(Pallas relax kernels), ``serve`` (query-serving subsystem), ``launch``
+(drivers), plus the training-substrate packages (``configs``, ``models``,
+``sharding``, ``train``, ``data``, ``checkpoint``).
+"""

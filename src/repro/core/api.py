@@ -153,14 +153,39 @@ def shortest_paths(
     block: int = 256,
     max_sweeps: int | None = None,
     delta: float | None = None,
+    target: int | None = None,
+    target_lb: float | None = None,
 ) -> SsspResult:
     """Run one SSSP engine.  ``source`` is an int (or int array for
     ``multisource`` / ``multisource_csr``).  Sharded engines need a
     ``mesh``; the adjacency is padded to the mesh-axis size automatically
     (paper §III-B.2).  ``delta`` enables the frontier engines' Δ-bucket
-    schedule (ignored elsewhere)."""
+    schedule (ignored elsewhere).
+
+    ``target=`` (frontier engines only) turns the solve into a
+    point-to-point query with an early exit: the fixpoint loop stops as
+    soon as ``dist[target]`` is provably final — with nonnegative weights,
+    once no pending vertex's label is below the target's, no relaxation
+    sequence can improve it (the Dijkstra settled-set argument).  The
+    returned ``dist[target]`` is bitwise-equal to the full solve's, as is
+    every entry with ``dist < dist[target]``; entries above it may still
+    sit above their fixpoint, and ``pred`` is only valid on that settled
+    region — a target result is a *partial* solve, so don't cache its row
+    as if it were complete (serve/scheduler.py treats it accordingly).
+    ``target_lb=`` optionally sharpens the exit with an admissible lower
+    bound on the s→t distance (e.g. a serve/landmarks.py ALT bound): the
+    loop additionally stops once ``dist[target] <= target_lb``.  The bound
+    MUST be admissible (never above the true distance) or exactness is
+    lost; too-small bounds are merely inert.  ``SsspResult.edges_relaxed``
+    and ``sweeps`` report the actual (reduced) work, which is what
+    benchmarks/serve_bench.py measures for the point-to-point scenario.
+    """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    if target is not None and engine not in FRONTIER_ENGINES:
+        raise ValueError(
+            f"target= early exit needs a frontier engine "
+            f"{FRONTIER_ENGINES}; got {engine!r}")
 
     if isinstance(g, csr_mod.CsrGraph):
         cg, n_true = g, g.n
@@ -222,6 +247,8 @@ def shortest_paths(
             sweep_fn=sweep_fn,
             max_sweeps=max_sweeps,
             delta=delta,
+            target=None if target is None else jnp.int32(target),
+            target_lb=None if target_lb is None else jnp.float32(target_lb),
         )
         return SsspResult(np.asarray(d), np.asarray(p), int(s), engine,
                           edges_relaxed=int(e))

@@ -31,6 +31,21 @@ and the limit advances by Δ when the current bucket drains — Δ-stepping
 restricted to the jit-static state (dist, pending, limit).  ``delta=None``
 (default) expands the full improved set each sweep (Bellman-Ford ordering).
 
+An optional **target early exit** (``target=...``) stops the fixpoint as
+soon as ``dist[target]`` is provably final: with nonnegative weights any
+future improvement to the target must route through a pending vertex ``u``
+with ``dist[u] < dist[target]``, so once every pending label is >=
+``dist[target]`` no relaxation sequence can lower it — the Dijkstra
+settled-vertex argument applied to the whole pending set.  The returned
+``dist[target]`` is bitwise identical to the full solve's; other entries
+may still be above their fixpoint (only vertices with ``dist <
+dist[target]`` are guaranteed settled).  ``target_lb=`` sharpens the rule
+with an admissible lower bound (e.g. an ALT landmark bound, see
+serve/landmarks.py): the loop also stops when ``dist[target] <=
+target_lb``, exact because a label can only equal the true distance once
+it is <= any admissible bound.  An inadmissible (too large) bound would
+break exactness; a too-small bound merely never fires.
+
 The engine also counts **edges relaxed** (sum of frontier out-degrees over
 all sweeps) so the O(frontier) claim is measurable: ``bellman_csr`` relaxes
 ``nnz * sweeps``; this engine's counter is strictly smaller whenever any
@@ -56,7 +71,8 @@ from repro.core.bellman_csr import csr_operands, predecessors_from_dist_csr
 INF = jnp.inf
 
 
-def frontier_operands(cg, *, with_ell: bool = False) -> dict:
+def frontier_operands(cg, *, with_ell: bool = False,
+                      base_ops: Optional[dict] = None) -> dict:
     """Stage a core.csr.CsrGraph for the frontier engine.
 
     Extends :func:`csr_operands` (incoming src/dst/w — kept for the O(m)
@@ -64,8 +80,11 @@ def frontier_operands(cg, *, with_ell: bool = False) -> dict:
     out-indptr is staged with one extra trailing entry so the compaction
     sentinel id n indexes a zero-degree row instead of falling off the end.
     ``with_ell`` adds the padded out-ELL view the Pallas kernel consumes.
+    ``base_ops`` reuses already-staged :func:`csr_operands` arrays instead
+    of uploading src/dst/w again (serve/registry.py holds both views on
+    one long-lived handle and must not double-stage the O(m) arrays).
     """
-    ops = csr_operands(cg)
+    ops = dict(base_ops) if base_ops is not None else csr_operands(cg)
     indptr, out_dst, out_w = cg.out_csr()
     indptr_s = np.concatenate([indptr, indptr[-1:]])     # (n + 2,)
     ops["out_indptr"] = jnp.asarray(indptr_s, jnp.int32)
@@ -162,6 +181,8 @@ def sssp_frontier(
     max_sweeps: int | None = None,
     delta: float | None = None,
     chunk: int = 1024,
+    target: Optional[jax.Array] = None,
+    target_lb: Optional[jax.Array] = None,
 ):
     """Frontier-compacted fixpoint SSSP on :func:`frontier_operands`.
 
@@ -175,6 +196,13 @@ def sssp_frontier(
     but deferred vertices re-enter later buckets, which can take more
     sweeps than the plain schedule.  ``chunk`` sizes the inner edge-slot
     blocks of the default sweep (ignored when ``sweep_fn`` is given).
+
+    ``target`` enables the early-exit stopping rule (module docstring):
+    the loop also stops once ``min(dist[pending]) >= dist[target]`` — or,
+    with an admissible ``target_lb``, once ``dist[target] <= target_lb``.
+    ``dist[target]`` (and every vertex with a smaller label) is then final
+    and bitwise-equal to the full solve; labels above it may be partial,
+    and ``pred`` entries are only valid for the settled region.
     """
     sweep = sweep_fn or make_flat_sweep_fn(chunk)
     # Δ-bucketing re-expands deferred vertices across later buckets, so
@@ -186,8 +214,19 @@ def sssp_frontier(
     limit0 = jnp.float32(0.0 if delta is None else delta)
 
     def cond(carry):
-        _, pending, _, it, _ = carry
-        return (it < cap) & jnp.any(pending)
+        dist, pending, _, it, _ = carry
+        go = (it < cap) & jnp.any(pending)
+        if target is not None:
+            dt = dist[target]
+            # settled once no pending label is below the target's: every
+            # future candidate is dist[u] + w >= dist[u] >= min pending.
+            settled = jnp.min(jnp.where(pending, dist, INF)) >= dt
+            if target_lb is not None:
+                # an admissible bound pins the label from below; label >=
+                # true distance always, so equality at the bound is final.
+                settled = settled | (dt <= target_lb)
+            go = go & ~settled
+        return go
 
     def body(carry):
         dist, pending, limit, it, edges = carry

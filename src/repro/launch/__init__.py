@@ -1,0 +1,5 @@
+"""Launch drivers: SSSP runs (sssp_run, sssp_serve), serving (serve),
+training (train), dry-run/roofline analysis (dryrun, hlo_analysis,
+memory_model).  Modules are imported on demand — several force XLA flags
+at import time, so nothing is re-exported here.
+"""

@@ -1,0 +1,158 @@
+"""SSSP serving driver: replay open-loop query traces against the serve
+subsystem and report latency/throughput/cache metrics.
+
+    PYTHONPATH=src python -m repro.launch.sssp_serve --smoke
+
+Mirrors launch/serve.py's shape (queue -> batcher -> engine, per-request
+latency + aggregate throughput), but for shortest-path queries: per
+scenario (uniform / zipf / p2p, see repro/serve/workload.py) the driver
+registers the graphs (with ALT landmarks), generates an open-loop arrival
+trace, and replays it in wall-clock time — events are submitted when
+their arrival time passes, the scheduler ticks whenever work is queued,
+and latency = completion - arrival (queueing included, the open-loop
+penalty for falling behind).
+
+Reported per scenario: p50/p99/max latency, queries/s, mean batch
+occupancy, dedup savings, answers-by-path, cache hit rate.
+
+``--verify`` (default under ``--smoke``) re-solves every distinct
+(graph, source) with the ``serial`` engine and asserts each served answer
+is bitwise-equal — the end-to-end form of the serving exactness
+guarantee (tests/test_serve.py holds the per-component forms).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import csr as C
+from repro.core.api import shortest_paths
+from repro.serve import (DistanceCache, GraphRegistry, LatencyRecorder,
+                         MicroBatchScheduler, SCENARIOS, make_trace)
+
+
+def replay(sched: MicroBatchScheduler, events) -> list:
+    """Wall-clock open-loop replay; returns Answers with done_at stamped."""
+    events = sorted(events, key=lambda e: e.arrival)
+    t0 = time.perf_counter()
+    i, answers = 0, []
+    while i < len(events) or sched.pending:
+        now = time.perf_counter() - t0
+        while i < len(events) and events[i].arrival <= now:
+            e = events[i]
+            sched.submit(e.graph, e.source, e.target, arrival=e.arrival)
+            i += 1
+        if sched.pending:
+            out = sched.tick()
+            done = time.perf_counter() - t0
+            for a in out:
+                a.done_at = done
+            answers.extend(out)
+        elif i < len(events):
+            time.sleep(min(events[i].arrival - now, 1e-3))
+    return answers
+
+
+def verify_answers(answers, graphs_by_name) -> int:
+    """Assert every served answer is bitwise-equal to a fresh serial
+    solve; returns the number of distinct (graph, source) rows checked."""
+    rows = {}
+    for a in answers:
+        q = a.query
+        if a.via == "error":
+            raise SystemExit(f"scheduler returned an error answer for {q}")
+        key = (q.graph, q.source)
+        if key not in rows:
+            rows[key] = shortest_paths(
+                graphs_by_name[q.graph], q.source, engine="serial").dist
+        ref = rows[key]
+        if q.target is None:
+            if not np.array_equal(a.value, ref):
+                raise SystemExit(
+                    f"row mismatch vs serial: {q} (via {a.via})")
+        else:
+            got, want = np.float32(a.value), ref[q.target]
+            ok = got == want or (np.isinf(got) and np.isinf(want))
+            if not ok:
+                raise SystemExit(
+                    f"dist mismatch vs serial: {q} (via {a.via}): "
+                    f"served {got!r}, serial {want!r}")
+    return len(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small graphs, short traces, verify on (CI-sized)")
+    ap.add_argument("--scenario", default="all",
+                    choices=("all",) + SCENARIOS)
+    ap.add_argument("--n", type=int, default=None,
+                    help="vertices per graph (default 10000; smoke 256)")
+    ap.add_argument("--graphs", type=int, default=2,
+                    help="number of registered graphs")
+    ap.add_argument("--queries", type=int, default=None,
+                    help="queries per scenario (default 400; smoke 60)")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="open-loop arrival rate, queries/s "
+                         "(default 500; smoke 2000)")
+    ap.add_argument("--batch", type=int, default=16,
+                    help="max distinct sources per tick per graph")
+    ap.add_argument("--landmarks", type=int, default=8,
+                    help="ALT landmarks per graph (0 disables)")
+    ap.add_argument("--cache-rows", type=int, default=256)
+    ap.add_argument("--verify", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="bitwise-check every answer vs serial "
+                         "(default: on under --smoke)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    n = args.n or (256 if args.smoke else 10000)
+    queries = args.queries or (60 if args.smoke else 400)
+    rate = args.rate or (2000.0 if args.smoke else 500.0)
+    verify = args.verify if args.verify is not None else args.smoke
+    scenarios = SCENARIOS if args.scenario == "all" else (args.scenario,)
+
+    graphs = [(f"g{i}", C.random_csr_graph(n, 3 * n, seed=args.seed + i))
+              for i in range(args.graphs)]
+    graphs_by_name = dict(graphs)
+    sizes = [(name, cg.n) for name, cg in graphs]
+
+    for scen in scenarios:
+        # fresh serving state per scenario so metrics don't bleed across
+        registry = GraphRegistry()
+        cache = DistanceCache(capacity=args.cache_rows)
+        sched = MicroBatchScheduler(registry, cache, max_batch=args.batch)
+        t0 = time.perf_counter()
+        for name, cg in graphs:
+            registry.register(name, cg, landmarks=args.landmarks,
+                              landmark_seed=args.seed)
+        prep_s = time.perf_counter() - t0
+
+        events = make_trace(scen, sizes, num_queries=queries, rate=rate,
+                            seed=args.seed)
+        answers = replay(sched, events)
+        rec = LatencyRecorder()
+        for a in answers:
+            rec.observe(a, a.done_at)
+        s, lat = sched.stats(), rec.summary()
+        print(f"[sssp_serve] {scen}: {lat['queries']} queries "
+              f"({args.graphs} graphs, n={n}, prep {prep_s:.2f}s) | "
+              f"p50 {lat['p50_ms']:.1f} ms, p99 {lat['p99_ms']:.1f} ms, "
+              f"{lat['qps']:.0f} q/s | "
+              f"occupancy {s['mean_occupancy']:.2f}, "
+              f"dedup saved {s['dedup_saved']}, "
+              f"cache hit rate {s['cache']['hit_rate']:.2f} | "
+              f"via {s['answered_via']}", flush=True)
+        if verify:
+            checked = verify_answers(answers, graphs_by_name)
+            print(f"[sssp_serve] {scen}: verified bitwise vs serial "
+                  f"({checked} distinct rows)", flush=True)
+
+    print("[sssp_serve] done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo package: transformer, attention, mlp, moe, ssm, blocks."""

@@ -1,0 +1,32 @@
+"""SSSP query-serving subsystem: registry -> scheduler -> engines -> cache.
+
+The serving layer over the core engine stack (see README.md §Serving):
+``GraphRegistry`` admits named graphs under a byte budget and pins their
+staged views; ``MicroBatchScheduler`` coalesces deduplicated sources into
+bucket-padded ``multisource_csr`` solves and point-to-point residues into
+``target=`` frontier solves; ``DistanceCache`` answers hot sources from
+solved rows; ``landmarks`` precomputes ALT bounds per graph; ``workload``
+generates the synthetic open-loop traces the driver
+(repro/launch/sssp_serve.py) replays.
+"""
+from repro.serve.cache import DistanceCache
+from repro.serve.landmarks import LandmarkSet, build_landmarks
+from repro.serve.registry import GraphHandle, GraphRegistry
+from repro.serve.scheduler import Answer, MicroBatchScheduler, Query
+from repro.serve.workload import (LatencyRecorder, SCENARIOS, TraceEvent,
+                                  make_trace)
+
+__all__ = [
+    "Answer",
+    "DistanceCache",
+    "GraphHandle",
+    "GraphRegistry",
+    "LandmarkSet",
+    "LatencyRecorder",
+    "MicroBatchScheduler",
+    "Query",
+    "SCENARIOS",
+    "TraceEvent",
+    "build_landmarks",
+    "make_trace",
+]

@@ -1,0 +1,97 @@
+"""Source-row distance cache — LRU over solved ``(graph, source)`` rows.
+
+The serving workloads (arXiv:1505.05033's observation, reproduced by the
+Zipf scenario in serve/workload.py) repeat sources heavily: a handful of
+hub sources account for most queries.  Once any engine has solved a source
+to its fixpoint, its (n,) distance row answers every later ``sssp(s)`` and
+``dist(s, t)`` query against the same graph without touching an engine.
+
+Rows are exact fixpoints, so cache hits preserve the bitwise-equal-to-
+serial guarantee trivially: the bytes returned are the bytes solved.  Two
+things must never be served from here: partial rows (a ``target=``
+early-exit solve) are not inserted at all, and a *t*-row is never used to
+answer ``dist(s, t)`` — undirected symmetry holds in exact arithmetic,
+but f32 path sums traversed from the other end can differ by an ulp,
+which would break bitwise equality with a fresh s-sourced solve.
+
+Eviction is plain LRU by row count (each row is n * 4 bytes, so a row
+budget is a byte budget per graph size); hit/miss/eviction counters feed
+the serve metrics and the BENCH_serve.json cache-hit gate.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Hashable, Optional
+
+import numpy as np
+
+
+class DistanceCache:
+    """LRU cache of solved distance rows keyed by ``(graph, source)``.
+
+    ``capacity`` bounds the number of rows held; 0 disables caching (every
+    ``get`` is a miss, ``put`` is a no-op) so the sequential baseline in
+    benchmarks/serve_bench.py can run the same scheduler cache-less.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 0:
+            raise ValueError(f"capacity must be >= 0, got {capacity}")
+        self.capacity = capacity
+        self._rows: "collections.OrderedDict[Hashable, np.ndarray]" = (
+            collections.OrderedDict())
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    def get(self, key: Hashable) -> Optional[np.ndarray]:
+        """Return the cached row (refreshing its recency) or None."""
+        row = self._rows.get(key)
+        if row is None:
+            self.misses += 1
+            return None
+        self._rows.move_to_end(key)
+        self.hits += 1
+        return row
+
+    def peek(self, key: Hashable) -> Optional[np.ndarray]:
+        """Like get but touches neither counters nor recency (for tests
+        and for probing both endpoint rows before committing to one)."""
+        return self._rows.get(key)
+
+    def put(self, key: Hashable, row: np.ndarray) -> None:
+        if self.capacity == 0:
+            return
+        if key in self._rows:
+            self._rows.move_to_end(key)
+        self._rows[key] = row
+        while len(self._rows) > self.capacity:
+            self._rows.popitem(last=False)
+            self.evictions += 1
+
+    def purge_graph(self, graph: Hashable) -> int:
+        """Drop every row belonging to ``graph`` (keys are ``(graph,
+        source)`` tuples) — wired to registry eviction so a re-registered
+        name can never serve rows of the evicted graph."""
+        stale = [k for k in self._rows if k[0] == graph]
+        for k in stale:
+            del self._rows[k]
+        return len(stale)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "rows": len(self._rows),
+            "capacity": self.capacity,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": round(self.hit_rate, 4),
+        }

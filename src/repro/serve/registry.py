@@ -1,0 +1,183 @@
+"""Graph registry — named graph handles with staged views and a byte budget.
+
+A query server holds a few registered graphs and answers many queries per
+graph, so per-graph state that core deliberately re-derives per solve is
+worth pinning here:
+
+* the CSR container itself (``Graph`` inputs are converted once);
+* the **staged device operands** — ``csr_operands`` is deliberately not
+  memoized on ``CsrGraph`` (core/bellman_csr.py) because a long-lived host
+  container shouldn't pin device memory; a registry entry is exactly the
+  long-lived *server* object that should, so both the segment-min and the
+  frontier operand pytrees are staged lazily and cached on the handle;
+* the **landmark set** (serve/landmarks.py), built at registration with
+  one batched multisource solve.
+
+Memory is accounted with the containers' own byte counters (``CsrGraph.
+nbytes``, ``LandmarkSet.nbytes``, device ``.nbytes`` of every staged
+array) and bounded by an LRU **byte budget**: registering or staging past
+the budget evicts the least-recently-used other graphs, fires the
+``on_evict`` hooks (the scheduler purges the evicted graph's cache rows),
+and drops the handle so its device buffers can be freed.  The most
+recently touched graph is never evicted — a single graph over budget is
+admitted (and flagged in ``stats()``) rather than leaving the server
+empty.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core import csr as csr_mod
+from repro.core import graph as graph_mod
+from repro.core.bellman_csr import csr_operands
+from repro.core.frontier import frontier_operands
+
+from repro.serve.landmarks import LandmarkSet, build_landmarks
+
+
+def _tree_bytes(ops: Optional[dict]) -> int:
+    return sum(int(a.nbytes) for a in ops.values()) if ops else 0
+
+
+@dataclasses.dataclass
+class GraphHandle:
+    """One registered graph: the CSR container plus lazily staged views."""
+
+    name: str
+    cg: csr_mod.CsrGraph
+    landmarks: Optional[LandmarkSet] = None
+    _csr_ops: Optional[dict] = dataclasses.field(default=None, repr=False)
+    _frontier_ops: Optional[dict] = dataclasses.field(default=None,
+                                                      repr=False)
+
+    @property
+    def n(self) -> int:
+        return self.cg.n
+
+    def csr_ops(self) -> dict:
+        """Staged segment-min operands (multisource / bellman_csr path)."""
+        if self._csr_ops is None:
+            self._csr_ops = csr_operands(self.cg)
+        return self._csr_ops
+
+    def frontier_ops(self) -> dict:
+        """Staged frontier operands (the ``target=`` point-to-point path).
+        Supersets csr_ops, whose staged arrays are reused — only the
+        outgoing views are uploaded on top."""
+        if self._frontier_ops is None:
+            self._frontier_ops = frontier_operands(
+                self.cg, base_ops=self.csr_ops())
+        return self._frontier_ops
+
+    @property
+    def nbytes(self) -> int:
+        """Host CSR + landmark rows + every distinct staged device array
+        (frontier_ops shares csr_ops' arrays; count each buffer once)."""
+        total = self.cg.nbytes
+        if self.landmarks is not None:
+            total += self.landmarks.nbytes
+        seen = {}
+        for ops in (self._csr_ops, self._frontier_ops):
+            if ops:
+                for a in ops.values():
+                    seen[id(a)] = int(a.nbytes)
+        return total + sum(seen.values())
+
+
+class GraphRegistry:
+    """LRU-evicting map of name -> :class:`GraphHandle`.
+
+    ``byte_budget=None`` disables eviction (the registry still accounts
+    bytes).  ``on_evict(name)`` callbacks run for every evicted graph.
+    """
+
+    def __init__(self, byte_budget: Optional[int] = None):
+        self.byte_budget = byte_budget
+        self._graphs: "collections.OrderedDict[str, GraphHandle]" = (
+            collections.OrderedDict())
+        self._on_evict: list[Callable[[str], None]] = []
+        self.registered = 0
+        self.evicted = 0
+
+    def __len__(self) -> int:
+        return len(self._graphs)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._graphs
+
+    @property
+    def names(self) -> tuple:
+        return tuple(self._graphs)
+
+    @property
+    def bytes_in_use(self) -> int:
+        return sum(h.nbytes for h in self._graphs.values())
+
+    def add_evict_hook(self, fn: Callable[[str], None]) -> None:
+        self._on_evict.append(fn)
+
+    def register(
+        self,
+        name: str,
+        g: "graph_mod.Graph | csr_mod.CsrGraph",
+        *,
+        landmarks: int = 0,
+        landmark_seed: int = 0,
+    ) -> GraphHandle:
+        """Admit a graph under ``name`` (replacing any previous holder of
+        the name, which counts as an eviction).  ``landmarks=K`` runs the
+        one-time ALT precompute (serve/landmarks.py) before admission."""
+        cg = g if isinstance(g, csr_mod.CsrGraph) else g.to_csr()
+        handle = GraphHandle(name=name, cg=cg)
+        if landmarks:
+            handle.landmarks = build_landmarks(
+                cg, landmarks, seed=landmark_seed, csr_ops=handle.csr_ops())
+        if name in self._graphs:
+            self._evict(name)
+        self._graphs[name] = handle
+        self.registered += 1
+        self._maybe_evict()
+        return handle
+
+    def get(self, name: str) -> GraphHandle:
+        """Fetch a handle, refreshing its LRU recency."""
+        if name not in self._graphs:
+            raise KeyError(
+                f"graph {name!r} is not registered (evicted or never "
+                f"admitted); registered: {list(self._graphs)}")
+        self._graphs.move_to_end(name)
+        return self._graphs[name]
+
+    def touch_staged(self, name: str) -> None:
+        """Re-run the budget check after a handle staged new device views
+        (scheduler calls this after csr_ops()/frontier_ops() grow)."""
+        if name in self._graphs:
+            self._maybe_evict()
+
+    def _evict(self, name: str) -> None:
+        del self._graphs[name]
+        self.evicted += 1
+        for fn in self._on_evict:
+            fn(name)
+
+    def _maybe_evict(self) -> None:
+        if self.byte_budget is None:
+            return
+        # never evict the most recently touched graph: a lone over-budget
+        # graph is admitted (visible via stats()['over_budget']).
+        while len(self._graphs) > 1 and self.bytes_in_use > self.byte_budget:
+            lru = next(iter(self._graphs))
+            self._evict(lru)
+
+    def stats(self) -> dict:
+        return {
+            "graphs": len(self._graphs),
+            "bytes_in_use": self.bytes_in_use,
+            "byte_budget": self.byte_budget,
+            "over_budget": (self.byte_budget is not None
+                            and self.bytes_in_use > self.byte_budget),
+            "registered": self.registered,
+            "evicted": self.evicted,
+        }

@@ -1,0 +1,284 @@
+"""Micro-batching query scheduler — queue -> dedup -> bucket-padded solve.
+
+The serving loop that turns the batched ``multisource_csr`` engine (so far
+only exercised by benchmarks) into a query server.  Each ``tick()``:
+
+1. drains the request queue and groups queries by graph;
+2. answers what it can **without an engine**: trivial ``dist(s, s)``,
+   cached source rows (serve/cache.py), landmark source rows and
+   landmark-proven disconnection (serve/landmarks.py) — always from the
+   query's own source direction, see ``_try_fast``;
+3. **deduplicates** the remaining sources — fifty queries against one hot
+   source cost one solved row — and coalesces up to ``max_batch`` distinct
+   sources into ONE ``multisource_csr`` solve, **padding** the source axis
+   up to a memoized bucket size (powers of two) by repeating the first
+   source, so repeat ticks present the same (S,) shape and hit the jit
+   cache instead of retracing;
+4. fans the solved rows back out to every waiting query and inserts them
+   into the distance cache.
+
+A tick whose residue is a single point-to-point query takes the
+**target early-exit path** instead: one ``frontier`` solve with
+``target=`` (core/frontier.py) sharpened by the landmark lower bound —
+the solve stops once the target's label is provably final.  Its row is
+partial by construction, so it is never cached.
+
+Every path returns bytes some engine solved (or a bound that *proves* the
+value), so served answers stay bitwise-equal to per-query ``serial``
+solves — the invariant tests/test_serve.py and the --smoke driver verify.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bellman_csr import sssp_multisource_csr
+from repro.core.frontier import sssp_frontier
+
+from repro.serve.cache import DistanceCache
+from repro.serve.registry import GraphRegistry
+
+VIAS = ("trivial", "cache", "landmark", "batch", "target", "error")
+
+
+@dataclasses.dataclass
+class Query:
+    """One request: ``target is None`` => full ``sssp(source)`` row,
+    else a point-to-point ``dist(source, target)`` scalar."""
+
+    qid: int
+    graph: str
+    source: int
+    target: Optional[int] = None
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
+class Answer:
+    query: Query
+    value: "np.ndarray | float | None"  # (n,) row for sssp, float for
+                                        # dist; None iff via == "error"
+    via: str                            # one of VIAS
+    done_at: float = 0.0                # stamped by the driver (wall clock)
+
+
+class MicroBatchScheduler:
+    """See module docstring.  ``max_batch`` caps distinct sources per
+    tick per graph (overflow is requeued ahead of newer arrivals);
+    ``p2p_solo=False`` disables the target early-exit path (everything
+    residual goes through the batched engine)."""
+
+    def __init__(
+        self,
+        registry: GraphRegistry,
+        cache: DistanceCache,
+        *,
+        max_batch: int = 16,
+        p2p_solo: bool = True,
+    ):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.registry = registry
+        self.cache = cache
+        self.max_batch = max_batch
+        self.p2p_solo = p2p_solo
+        registry.add_evict_hook(cache.purge_graph)
+        self._queue: "collections.deque[Query]" = collections.deque()
+        self._next_qid = 0
+        self.ticks = 0
+        self.engine_batches = 0
+        self.engine_sources = 0
+        self.target_solves = 0
+        self.dedup_saved = 0
+        self.occupancy_sum = 0.0
+        self.answered_via = {v: 0 for v in VIAS}
+
+    # -- queue ------------------------------------------------------------
+
+    def submit(self, graph: str, source: int, target: Optional[int] = None,
+               *, arrival: float = 0.0) -> Query:
+        q = Query(qid=self._next_qid, graph=graph, source=int(source),
+                  target=None if target is None else int(target),
+                  arrival=arrival)
+        self._next_qid += 1
+        self._queue.append(q)
+        return q
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- answer-without-engine paths --------------------------------------
+
+    def _try_fast(self, handle, q: Query) -> Optional[Answer]:
+        """Trivial / cache / landmark answers; None if an engine is needed.
+
+        Only SAME-DIRECTION rows are served: an undirected graph has
+        d(s, t) == d(t, s) in exact arithmetic, but f32 path sums round
+        differently when traversed from the other end, so answering
+        ``dist(s, t)`` from a cached/landmark *t*-row would break the
+        bitwise-equal-to-serial guarantee by an ulp.  Symmetry is still
+        exploited where it is exact: the landmark disconnection proof.
+        """
+        if q.target is not None and q.target == q.source:
+            return Answer(q, 0.0, "trivial")
+        row = self.cache.get((q.graph, q.source))
+        if row is not None:
+            val = row if q.target is None else float(row[q.target])
+            return Answer(q, val, "cache")
+        ls = handle.landmarks
+        if ls is not None:
+            row = ls.row_of(q.source)
+            if row is not None:
+                val = row if q.target is None else float(row[q.target])
+                return Answer(q, val, "landmark")
+            if (q.target is not None
+                    and not np.isfinite(ls.lower_bound(q.source, q.target))):
+                # some landmark reaches exactly one endpoint: s and t are
+                # provably disconnected (undirected graphs only — which
+                # is the only kind landmarks are built for), so inf is
+                # the exact answer, no solve needed; inf is ulp-proof.
+                return Answer(q, float("inf"), "landmark")
+        return None
+
+    # -- engine paths -----------------------------------------------------
+
+    def _bucket(self, count: int) -> int:
+        """Smallest power of two >= count, clamped to max_batch — the
+        memoized source-axis sizes that keep repeat ticks on the same
+        compiled multisource solve."""
+        b = 1
+        while b < count:
+            b *= 2
+        return min(b, self.max_batch)
+
+    def _solve_target(self, handle, q: Query) -> Answer:
+        """Point-to-point residue of a tick: one frontier solve that
+        early-exits on the target (plus the landmark bound when one is
+        admissibly available).  The row is partial — never cached."""
+        ops = handle.frontier_ops()
+        self.registry.touch_staged(handle.name)
+        lb = None
+        if handle.landmarks is not None:
+            lb = handle.landmarks.conservative_lb(q.source, q.target)
+            lb = None if not np.isfinite(lb) else jnp.float32(lb)
+        d, _, _, _ = sssp_frontier(
+            ops, jnp.int32(q.source), n=handle.n,
+            target=jnp.int32(q.target), target_lb=lb,
+        )
+        self.target_solves += 1
+        return Answer(q, float(np.asarray(d)[q.target]), "target")
+
+    def _solve_batch(self, handle, queries: list) -> list:
+        """One bucket-padded multisource solve answering ``queries``
+        (all on ``handle``'s graph, <= max_batch distinct sources)."""
+        distinct: list[int] = []
+        for q in queries:
+            if q.source not in distinct:
+                distinct.append(q.source)
+        bucket = self._bucket(len(distinct))
+        padded = distinct + [distinct[0]] * (bucket - len(distinct))
+        D, _ = sssp_multisource_csr(
+            handle.csr_ops(), jnp.asarray(padded, jnp.int32), n=handle.n)
+        self.registry.touch_staged(handle.name)
+        rows = np.asarray(D)
+        self.engine_batches += 1
+        self.engine_sources += len(distinct)
+        self.dedup_saved += len(queries) - len(distinct)
+        self.occupancy_sum += len(distinct) / bucket
+        by_source = {s: rows[i] for i, s in enumerate(distinct)}
+        out = []
+        for q in queries:
+            row = by_source[q.source]
+            self.cache.put((q.graph, q.source), row)
+            val = row if q.target is None else float(row[q.target])
+            out.append(Answer(q, val, "batch"))
+        return out
+
+    # -- the tick ---------------------------------------------------------
+
+    def tick(self) -> list:
+        """Drain the queue once; returns the Answers produced this tick
+        (overflow beyond max_batch distinct sources per graph is requeued
+        ahead of newer arrivals)."""
+        if not self._queue:
+            return []
+        self.ticks += 1
+        batch, self._queue = list(self._queue), collections.deque()
+        by_graph: "collections.OrderedDict[str, list]" = (
+            collections.OrderedDict())
+        for q in batch:
+            by_graph.setdefault(q.graph, []).append(q)
+        answers: list = []
+        requeue: list = []
+        for name, queries in by_graph.items():
+            if name not in self.registry:
+                # the graph was evicted (or never registered): fail these
+                # queries with error answers rather than crashing the
+                # tick and losing every other graph's drained queries.
+                answers.extend(Answer(q, None, "error") for q in queries)
+                continue
+            handle = self.registry.get(name)
+            need_engine = []
+            for q in queries:
+                ans = self._try_fast(handle, q)
+                if ans is None:
+                    need_engine.append(q)
+                else:
+                    answers.append(ans)
+            if not need_engine:
+                continue
+            # cap distinct sources at max_batch; queries on uncovered
+            # sources wait for the next tick.
+            allowed: list[int] = []
+            take, defer = [], []
+            for q in need_engine:
+                if q.source in allowed:
+                    take.append(q)
+                elif len(allowed) < self.max_batch:
+                    allowed.append(q.source)
+                    take.append(q)
+                else:
+                    defer.append(q)
+            requeue.extend(defer)
+            if (self.p2p_solo and len(take) == 1
+                    and take[0].target is not None):
+                answers.append(self._solve_target(handle, take[0]))
+            else:
+                answers.extend(self._solve_batch(handle, take))
+        for q in reversed(requeue):
+            self._queue.appendleft(q)
+        for a in answers:
+            self.answered_via[a.via] += 1
+        return answers
+
+    def drain(self) -> list:
+        """Tick until the queue is empty (closed-loop replay)."""
+        out = []
+        while self._queue:
+            out.extend(self.tick())
+        return out
+
+    # -- metrics ----------------------------------------------------------
+
+    @property
+    def mean_occupancy(self) -> float:
+        return (self.occupancy_sum / self.engine_batches
+                if self.engine_batches else 0.0)
+
+    def stats(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "engine_batches": self.engine_batches,
+            "engine_sources": self.engine_sources,
+            "target_solves": self.target_solves,
+            "dedup_saved": self.dedup_saved,
+            "mean_occupancy": round(self.mean_occupancy, 4),
+            "answered_via": dict(self.answered_via),
+            "cache": self.cache.stats(),
+            "registry": self.registry.stats(),
+        }

@@ -1,0 +1,140 @@
+"""Synthetic serving workloads: open-loop arrival traces + latency metrics.
+
+Three scenarios, matching the workload taxonomy of arXiv:1505.05033 (real
+query streams are repeat-heavy) scaled down to a reproducible generator:
+
+* ``uniform`` — full ``sssp(s)`` queries, sources uniform over the graph:
+  the cache-hostile baseline where batching + dedup must carry throughput.
+* ``zipf`` — ``sssp(s)`` queries with Zipf-skewed sources (rank
+  probability 1/rank^a over a seeded permutation): a few hub sources
+  dominate, so the distance cache and dedup absorb most of the load.
+* ``p2p`` — point-to-point heavy: mostly ``dist(s, t)`` queries with
+  Zipf-skewed endpoints, a sprinkle of full-row queries; exercises the
+  landmark answers and the ``target=`` early-exit path.
+
+Arrivals are **open loop**: exponential inter-arrival times at ``rate``
+queries/s, independent of service progress — the server falls behind when
+a tick is slower than the arrivals it spans, and latency includes that
+queueing delay.  Multi-graph traces interleave queries across graphs
+uniformly.
+
+``LatencyRecorder`` folds per-answer latencies into p50/p99, queries/s and
+per-path counts; scenario summaries land in BENCH_serve.json
+(benchmarks/serve_bench.py) and the driver printout
+(launch/sssp_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+SCENARIOS = ("uniform", "zipf", "p2p")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    arrival: float              # seconds since trace start
+    graph: str
+    source: int
+    target: Optional[int]       # None => full sssp row
+
+
+def zipf_vertices(rng: np.random.Generator, n: int, size: int,
+                  a: float = 1.1,
+                  perm: Optional[np.ndarray] = None) -> np.ndarray:
+    """Zipf-skewed vertex ids: probability 1/rank^a over a permutation of
+    [0, n), so the hot set is scattered over the id space (not just the
+    low ids).  Pass ``perm`` to pin the rank->vertex assignment — two
+    traces sharing a perm share their hot vertices, which is what makes a
+    steady-state cache measurement meaningful."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** -a
+    p /= p.sum()
+    if perm is None:
+        perm = rng.permutation(n)
+    return perm[rng.choice(n, size=size, p=p)].astype(np.int64)
+
+
+def make_trace(
+    scenario: str,
+    graphs: Sequence[tuple],        # (name, n) pairs
+    *,
+    num_queries: int,
+    rate: float,
+    seed: int = 0,
+    zipf_a: float = 1.1,
+    p2p_frac: float = 0.85,
+    hot_seed: Optional[int] = None,
+) -> list:
+    """Generate one open-loop trace (see module docstring).  ``rate`` is
+    the mean arrival rate in queries/s; ``p2p_frac`` only applies to the
+    p2p scenario (the rest of its queries are full rows).  ``hot_seed``
+    pins the Zipf rank->vertex permutation independently of ``seed``, so
+    differently-seeded traces target the same hot set (the steady-state
+    serving shape benchmarks/serve_bench.py measures)."""
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}; "
+                         f"choose from {SCENARIOS}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=num_queries))
+    which = rng.integers(0, len(graphs), size=num_queries)
+    # two skewed draws per event covers every scenario's worst case; the
+    # per-graph pools are drawn up front so the Zipf setup (perm + rank
+    # probabilities, O(n)) runs once per graph, not per event.
+    pools = {}
+    for gi, (name, n) in enumerate(graphs):
+        if scenario == "uniform":
+            pools[gi] = rng.integers(0, n, size=2 * num_queries)
+        else:
+            perm = None
+            if hot_seed is not None:
+                perm = np.random.default_rng(
+                    (hot_seed, gi)).permutation(n)
+            pools[gi] = zipf_vertices(rng, n, 2 * num_queries, zipf_a,
+                                      perm=perm)
+    p2p_draw = rng.random(num_queries)
+    events = []
+    for i in range(num_queries):
+        gi = int(which[i])
+        name, n = graphs[gi]
+        src = int(pools[gi][2 * i])
+        tgt = None
+        if scenario == "p2p" and p2p_draw[i] < p2p_frac:
+            tgt = int(pools[gi][2 * i + 1])
+        events.append(TraceEvent(float(arrivals[i]), name, src, tgt))
+    return events
+
+
+class LatencyRecorder:
+    """Accumulates per-answer latencies and renders the serving summary."""
+
+    def __init__(self):
+        self.latencies: list[float] = []
+        self.first_arrival: Optional[float] = None
+        self.last_done: float = 0.0
+
+    def observe(self, answer, now: float) -> None:
+        """Record one Answer completed at wall-clock offset ``now``
+        (latency = completion - arrival, i.e. queueing + service)."""
+        self.latencies.append(now - answer.query.arrival)
+        a = answer.query.arrival
+        if self.first_arrival is None or a < self.first_arrival:
+            self.first_arrival = a
+        self.last_done = max(self.last_done, now)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies, np.float64)
+        if lat.size == 0:
+            return {"queries": 0}
+        span = max(self.last_done - (self.first_arrival or 0.0), 1e-9)
+        return {
+            "queries": int(lat.size),
+            "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "max_ms": round(float(lat.max()) * 1e3, 3),
+            "qps": round(lat.size / span, 2),
+        }

@@ -1,0 +1,1 @@
+"""Sharding rules package (see rules.py)."""

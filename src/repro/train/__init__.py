@@ -1,0 +1,1 @@
+"""Training substrate package: optimizer, state, step, compression."""

@@ -1,0 +1,451 @@
+"""Serving subsystem correctness: every served answer is oracle-exact.
+
+The serving layer (repro/serve) composes batching, deduplication, caching,
+and landmark pruning — each a chance to serve a wrong byte.  These tests
+pin the invariant the whole subsystem is built around: whatever path an
+answer takes (cache hit, landmark row, bucket-padded multisource batch,
+target early-exit frontier solve), it is bitwise-equal to a fresh
+``serial`` engine solve of the same query.  Plus the machinery itself:
+registry byte-budget LRU eviction (with cache purge), scheduler dedup and
+bucket padding, cache LRU counters, landmark-bound admissibility
+(property-tested when hypothesis is installed), and the ``target=``
+early-exit contract of core/frontier.py.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+import jax.numpy as jnp
+
+from conftest import dijkstra_oracle
+from repro.core import csr as C
+from repro.core import graph as G
+from repro.core.api import shortest_paths
+from repro.core.frontier import frontier_operands, sssp_frontier
+from repro.serve import (DistanceCache, GraphRegistry, LatencyRecorder,
+                         MicroBatchScheduler, build_landmarks, make_trace)
+from repro.serve.landmarks import sample_landmark_ids
+from repro.serve.workload import zipf_vertices
+
+
+def _stack(cg, *, budget=None, cache_rows=256, max_batch=8, landmarks=0,
+           name="g"):
+    registry = GraphRegistry(byte_budget=budget)
+    cache = DistanceCache(capacity=cache_rows)
+    sched = MicroBatchScheduler(registry, cache, max_batch=max_batch)
+    registry.register(name, cg, landmarks=landmarks)
+    return registry, cache, sched
+
+
+def _serial_rows(cg, sources):
+    return {s: shortest_paths(cg, s, engine="serial").dist
+            for s in set(sources)}
+
+
+def _assert_exact(answers, rows_by_graph):
+    """Every Answer bitwise-equal to the serial row of its query."""
+    for a in answers:
+        q = a.query
+        ref = rows_by_graph[q.graph][q.source]
+        if q.target is None:
+            assert np.array_equal(a.value, ref), (q, a.via)
+        else:
+            got, want = np.float32(a.value), ref[q.target]
+            assert got == want or (np.isinf(got) and np.isinf(want)), \
+                (q, a.via, got, want)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lru_eviction_by_byte_budget():
+    graphs = [C.random_csr_graph(200, 600, seed=i) for i in range(3)]
+    one = graphs[0].nbytes
+    registry = GraphRegistry(byte_budget=int(2.5 * one))
+    evicted = []
+    registry.add_evict_hook(evicted.append)
+    for i, cg in enumerate(graphs):
+        registry.register(f"g{i}", cg)
+    # third registration blows the 2.5-graph budget: g0 (LRU) must go
+    assert evicted == ["g0"]
+    assert registry.names == ("g1", "g2")
+    assert registry.stats()["evicted"] == 1
+    with pytest.raises(KeyError):
+        registry.get("g0")
+    # touching g1 makes g2 the LRU victim of the next admission
+    registry.get("g1")
+    registry.register("g3", C.random_csr_graph(200, 600, seed=9))
+    assert "g1" in registry and "g2" not in registry
+
+
+def test_registry_staged_bytes_are_accounted():
+    cg = C.random_csr_graph(100, 300, seed=0)
+    registry = GraphRegistry()
+    h = registry.register("g", cg)
+    base = registry.bytes_in_use
+    h.csr_ops()
+    staged = registry.bytes_in_use
+    assert staged > base          # device arrays now counted
+    h.frontier_ops()
+    assert registry.bytes_in_use > staged
+    # frontier_ops shares csr_ops' arrays: the increment is the out-CSR
+    # views only, not a second copy of src/dst/w
+    shared = sum(int(a.nbytes) for a in h.csr_ops().values())
+    assert registry.bytes_in_use - base < 2 * shared + cg.n * 8
+
+
+def test_registry_single_graph_over_budget_is_admitted():
+    cg = C.random_csr_graph(300, 900, seed=1)
+    registry = GraphRegistry(byte_budget=10)      # absurdly small
+    registry.register("g", cg)
+    assert "g" in registry and registry.stats()["over_budget"]
+
+
+def test_registry_eviction_purges_cache_rows():
+    g0, g1 = (C.random_csr_graph(150, 450, seed=i) for i in (0, 1))
+    registry, cache, sched = _stack(g0, budget=int(1.5 * g0.nbytes),
+                                    name="g0")
+    sched.submit("g0", 3)
+    sched.drain()
+    assert cache.peek(("g0", 3)) is not None
+    registry.register("g1", g1)                   # evicts g0
+    assert cache.peek(("g0", 3)) is None          # purged with its graph
+    # queries against the evicted graph get error answers; queries for
+    # live graphs drained in the same tick are still served
+    sched.submit("g0", 4)
+    sched.submit("g1", 2)
+    answers = sched.tick()
+    by_graph = {a.query.graph: a for a in answers}
+    assert by_graph["g0"].via == "error" and by_graph["g0"].value is None
+    assert np.array_equal(
+        by_graph["g1"].value,
+        shortest_paths(g1, 2, engine="serial").dist)
+
+
+def test_registry_reregister_same_name_purges_stale_rows():
+    g_old = C.random_csr_graph(150, 450, seed=0)
+    g_new = C.random_csr_graph(150, 450, seed=5)
+    registry, cache, sched = _stack(g_old)
+    sched.submit("g", 7)
+    sched.drain()
+    registry.register("g", g_new)                 # same name, new graph
+    sched.submit("g", 7)
+    (ans,) = sched.drain()
+    ref = shortest_paths(g_new, 7, engine="serial").dist
+    assert np.array_equal(ans.value, ref)         # not the stale g_old row
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+def test_cache_lru_counters_and_eviction():
+    cache = DistanceCache(capacity=2)
+    r = {k: np.full(4, float(k)) for k in range(3)}
+    cache.put(("g", 0), r[0])
+    cache.put(("g", 1), r[1])
+    assert cache.get(("g", 0)) is r[0]            # 0 now MRU
+    cache.put(("g", 2), r[2])                     # evicts 1 (LRU)
+    assert cache.get(("g", 1)) is None
+    assert cache.get(("g", 2)) is r[2]
+    assert (cache.hits, cache.misses, cache.evictions) == (2, 1, 1)
+    assert cache.stats()["hit_rate"] == pytest.approx(2 / 3, abs=1e-3)
+
+
+def test_cache_capacity_zero_disables():
+    cache = DistanceCache(capacity=0)
+    cache.put(("g", 0), np.zeros(4))
+    assert cache.get(("g", 0)) is None and len(cache) == 0
+
+
+def test_cache_purge_graph_is_selective():
+    cache = DistanceCache(capacity=8)
+    cache.put(("a", 0), np.zeros(2))
+    cache.put(("a", 1), np.zeros(2))
+    cache.put(("b", 0), np.ones(2))
+    assert cache.purge_graph("a") == 2
+    assert cache.peek(("b", 0)) is not None and len(cache) == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler: dedup, bucketing, exactness per path
+# ---------------------------------------------------------------------------
+
+def test_scheduler_dedup_one_solve_for_repeat_sources():
+    cg = C.random_csr_graph(120, 360, seed=2)
+    _, _, sched = _stack(cg)
+    for _ in range(10):
+        sched.submit("g", 5)
+    for t in (1, 2, 3):
+        sched.submit("g", 5, t)
+    answers = sched.tick()
+    assert len(answers) == 13
+    assert sched.engine_batches == 1              # ONE solve served all 13
+    assert sched.engine_sources == 1
+    assert sched.dedup_saved == 12
+    _assert_exact(answers, {"g": _serial_rows(cg, [5])})
+
+
+def test_scheduler_bucket_padding_hits_powers_of_two():
+    cg = C.random_csr_graph(100, 300, seed=3)
+    _, _, sched = _stack(cg, max_batch=8)
+    for s in (1, 2, 3):                           # 3 distinct -> bucket 4
+        sched.submit("g", s)
+    sched.tick()
+    assert sched.mean_occupancy == pytest.approx(3 / 4)
+    assert sched._bucket(1) == 1 and sched._bucket(3) == 4
+    assert sched._bucket(8) == 8 and sched._bucket(100) == 8  # clamped
+
+
+def test_scheduler_overflow_requeues_beyond_max_batch():
+    cg = C.random_csr_graph(60, 180, seed=4)
+    _, _, sched = _stack(cg, max_batch=4)
+    for s in range(10):
+        sched.submit("g", s)
+    first = sched.tick()
+    assert len(first) == 4 and sched.pending == 6
+    rest = sched.drain()
+    assert len(rest) == 6
+    rows = _serial_rows(cg, range(10))
+    _assert_exact(first + rest, {"g": rows})
+
+
+def test_scheduler_cache_hits_skip_engine():
+    cg = C.random_csr_graph(80, 240, seed=5)
+    _, cache, sched = _stack(cg)
+    sched.submit("g", 11)
+    sched.drain()
+    batches = sched.engine_batches
+    sched.submit("g", 11)                         # same source again
+    sched.submit("g", 11, 40)                     # and a p2p off the row
+    answers = sched.drain()
+    assert sched.engine_batches == batches        # no new solve
+    assert all(a.via == "cache" for a in answers)
+    _assert_exact(answers, {"g": _serial_rows(cg, [11])})
+
+
+def test_scheduler_target_solo_path_exact_and_uncached():
+    cg = C.random_csr_graph(150, 450, seed=6)
+    _, cache, sched = _stack(cg, landmarks=4)
+    ids = set(sched.registry.get("g").landmarks.ids.tolist())
+    s = next(v for v in range(150) if v not in ids)
+    sched.submit("g", s, (s + 37) % 150)
+    (ans,) = sched.drain()
+    assert ans.via == "target" and sched.target_solves == 1
+    # a target= solve is partial: its row must NOT have been cached
+    assert cache.peek(("g", s)) is None
+    _assert_exact([ans], {"g": _serial_rows(cg, [s])})
+
+
+def test_scheduler_landmark_row_answers_are_engine_rows():
+    cg = C.random_csr_graph(90, 270, seed=7)
+    _, _, sched = _stack(cg, landmarks=6)
+    lm = int(sched.registry.get("g").landmarks.ids[0])
+    sched.submit("g", lm)                         # sssp at a landmark
+    sched.submit("g", lm, (lm + 1) % 90)          # p2p sourced at one
+    answers = sched.drain()
+    assert all(a.via == "landmark" for a in answers)
+    assert sched.engine_batches == 0
+    _assert_exact(answers, {"g": _serial_rows(cg, [lm])})
+
+
+def test_scheduler_landmark_disconnection_answer():
+    # two components; landmark in the big one proves inf to the island
+    edges = np.stack([np.arange(49), np.arange(1, 50)], 1)
+    cg = G.csr_from_edge_list(52, edges, np.ones(49) * 2.0)
+    registry, _, sched = _stack(cg, landmarks=0)
+    handle = registry.get("g")
+    handle.landmarks = build_landmarks(cg, 8, seed=0)
+    src = int(next(i for i in range(50)
+                   if np.isfinite(handle.landmarks.D[:, i]).any()
+                   and i not in set(handle.landmarks.ids.tolist())))
+    sched.submit("g", src, 51)                    # 50..51 is the island
+    (ans,) = sched.drain()
+    assert ans.via == "landmark" and np.isinf(ans.value)
+    ref = shortest_paths(cg, src, engine="serial").dist
+    assert np.isinf(ref[51])
+
+
+# ---------------------------------------------------------------------------
+# trace replay end-to-end (the zipf satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["uniform", "zipf", "p2p"])
+def test_trace_replay_bitwise_exact(scenario):
+    g0 = C.random_csr_graph(130, 390, seed=8)
+    g1 = C.random_csr_graph(90, 270, seed=9)
+    registry, cache, sched = _stack(g0, landmarks=5, max_batch=4, name="g0")
+    registry.register("g1", g1, landmarks=5)
+    events = make_trace(scenario, [("g0", 130), ("g1", 90)],
+                        num_queries=50, rate=1e4, seed=10)
+    rec = LatencyRecorder()
+    for e in events:
+        sched.submit(e.graph, e.source, e.target, arrival=e.arrival)
+    answers = sched.drain()
+    for a in answers:
+        rec.observe(a, now=1.0)
+    assert len(answers) == 50
+    rows = {"g0": _serial_rows(g0, [a.query.source for a in answers
+                                    if a.query.graph == "g0"]),
+            "g1": _serial_rows(g1, [a.query.source for a in answers
+                                    if a.query.graph == "g1"])}
+    _assert_exact(answers, rows)
+    assert rec.summary()["queries"] == 50
+    if scenario == "zipf":
+        # the skew must actually produce engine savings via dedup/cache
+        served_free = (sched.dedup_saved
+                       + sched.answered_via["cache"]
+                       + sched.answered_via["landmark"])
+        assert served_free > 0
+
+
+def test_zipf_trace_is_skewed_and_deterministic():
+    rng = np.random.default_rng(0)
+    v = zipf_vertices(rng, 1000, 5000, 1.1)
+    _, counts = np.unique(v, return_counts=True)
+    assert counts.max() > 5 * np.median(counts)   # heavy head
+    t1 = make_trace("zipf", [("g", 50)], num_queries=20, rate=10, seed=3)
+    t2 = make_trace("zipf", [("g", 50)], num_queries=20, rate=10, seed=3)
+    assert t1 == t2
+    # hot_seed pins the hot set across different event seeds
+    a = make_trace("zipf", [("g", 200)], num_queries=300, rate=10,
+                   seed=1, hot_seed=42)
+    b = make_trace("zipf", [("g", 200)], num_queries=300, rate=10,
+                   seed=2, hot_seed=42)
+    hot_a = {e.source for e in a}
+    hot_b = {e.source for e in b}
+    assert len(hot_a & hot_b) > 0
+
+
+# ---------------------------------------------------------------------------
+# landmarks: admissibility
+# ---------------------------------------------------------------------------
+
+def test_landmark_bounds_admissible_seeded():
+    for seed in range(5):
+        cg = C.random_csr_graph(80, 200, seed=seed)
+        ls = build_landmarks(cg, 6, seed=seed)
+        rng = np.random.default_rng(seed)
+        for _ in range(20):
+            s, t = int(rng.integers(80)), int(rng.integers(80))
+            d = dijkstra_oracle(cg, s)[t]
+            lb, ub = ls.lower_bound(s, t), ls.upper_bound(s, t)
+            if np.isinf(d):
+                assert np.isinf(lb) or lb == 0.0 or np.isfinite(lb)
+                assert np.isinf(ub)
+            else:
+                assert lb <= d * (1 + 1e-5) + 1e-5
+                assert ub >= d * (1 - 1e-5) - 1e-5
+            assert ls.conservative_lb(s, t) <= max(lb, 0.0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(1, 8),
+           st_pair=st.tuples(st.integers(0, 59), st.integers(0, 59)))
+    def test_landmark_lower_bound_admissible_property(seed, k, st_pair):
+        cg = C.random_csr_graph(60, 180, seed=seed % 97)
+        ls = build_landmarks(cg, k, seed=seed)
+        s, t = st_pair
+        d = dijkstra_oracle(cg, s)[t]
+        lb = ls.lower_bound(s, t)
+        if np.isfinite(d):
+            # admissible up to f32 rounding of the engine rows
+            assert lb <= d * (1 + 1e-5) + 1e-5
+            assert ls.conservative_lb(s, t) <= d * (1 + 1e-6) + 1e-5
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_landmark_lower_bound_admissible_property():
+        pass
+
+
+def test_landmark_refuses_directed_graphs():
+    cg = C.random_csr_graph(40, 120, seed=0, directed=True)
+    with pytest.raises(ValueError, match="directed"):
+        build_landmarks(cg, 3)
+
+
+def test_sample_landmark_ids_distinct_and_bounded():
+    ids = sample_landmark_ids(50, 50, seed=1)
+    assert sorted(ids.tolist()) == list(range(50))
+    with pytest.raises(ValueError):
+        sample_landmark_ids(10, 11)
+
+
+# ---------------------------------------------------------------------------
+# target= early exit (core/frontier.py + api threading)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m,seed", [(60, 180, 0), (200, 600, 1),
+                                      (150, 300, 2)])
+def test_target_early_exit_bitwise_vs_full_solve(n, m, seed):
+    cg = C.random_csr_graph(n, m, seed=seed)
+    full = shortest_paths(cg, 0, engine="frontier")
+    rng = np.random.default_rng(seed)
+    for t in {0, n - 1, *rng.integers(0, n, 5).tolist()}:
+        part = shortest_paths(cg, 0, engine="frontier", target=int(t))
+        assert part.dist[t] == full.dist[t]
+        assert part.sweeps <= full.sweeps
+        assert part.edges_relaxed <= full.edges_relaxed
+
+
+def test_target_early_exit_with_admissible_lb_is_exact_and_cheaper():
+    cg = C.random_csr_graph(300, 900, seed=3)
+    ls = build_landmarks(cg, 8, seed=3)
+    full = shortest_paths(cg, 7, engine="frontier")
+    for t in (50, 150, 299):
+        lb = ls.conservative_lb(7, t)
+        part = shortest_paths(cg, 7, engine="frontier", target=t,
+                              target_lb=lb)
+        assert part.dist[t] == full.dist[t]
+        assert part.edges_relaxed <= full.edges_relaxed
+
+
+def test_target_exit_settled_region_is_exact():
+    # everything the early exit claims settled (dist < dist[target])
+    # must equal the full fixpoint bitwise
+    cg = C.random_csr_graph(120, 360, seed=4)
+    full = shortest_paths(cg, 0, engine="frontier")
+    part = shortest_paths(cg, 0, engine="frontier", target=60)
+    settled = part.dist < part.dist[60]
+    assert np.array_equal(part.dist[settled], full.dist[settled])
+
+
+def test_target_unreachable_runs_to_fixpoint():
+    edges = np.stack([np.arange(9), np.arange(1, 10)], 1)
+    cg = G.csr_from_edge_list(12, edges, np.ones(9))  # 10..11 islanded
+    res = shortest_paths(cg, 0, engine="frontier", target=11)
+    assert np.isinf(res.dist[11])
+    full = shortest_paths(cg, 0, engine="frontier")
+    assert np.array_equal(res.dist, full.dist)
+
+
+def test_target_rejected_for_non_frontier_engines():
+    cg = C.random_csr_graph(30, 90, seed=5)
+    with pytest.raises(ValueError, match="frontier"):
+        shortest_paths(cg, 0, engine="bellman_csr", target=3)
+
+
+def test_target_with_delta_schedule_exact():
+    cg = C.random_csr_graph(150, 450, seed=6)
+    full = shortest_paths(cg, 2, engine="frontier")
+    part = shortest_paths(cg, 2, engine="frontier", target=99, delta=25.0)
+    assert part.dist[99] == full.dist[99]
+
+
+def test_raw_sssp_frontier_target_counts_reduced_work():
+    cg = C.random_csr_graph(400, 1200, seed=7)
+    ops = frontier_operands(cg)
+    d_full, _, s_full, e_full = sssp_frontier(ops, jnp.int32(0), n=cg.n)
+    # a target adjacent to the source should settle in very few sweeps
+    nbr = int(np.asarray(ops["out_dst"])[int(ops["out_indptr"][0])])
+    d, _, s, e = sssp_frontier(ops, jnp.int32(0), n=cg.n,
+                               target=jnp.int32(nbr))
+    assert d[nbr] == d_full[nbr]
+    assert int(s) <= int(s_full) and int(e) <= int(e_full)
