@@ -1,8 +1,8 @@
 """Assemble EXPERIMENTS.md §Dry-run, §Roofline, §SSSP-bench, §Serve-bench,
-and §Weak-scaling tables from the dry-run JSON records, BENCH_sssp.json,
-BENCH_serve.json, and experiments/bench/weak_scaling.csv (single sources
-of truth), leaving hand-written sections (§Paper, §Perf) intact via marker
-comments.
+§Dynamic-bench, and §Weak-scaling tables from the dry-run JSON records,
+BENCH_sssp.json, BENCH_serve.json, BENCH_dynamic.json, and
+experiments/bench/weak_scaling.csv (single sources of truth), leaving
+hand-written sections (§Paper, §Perf) intact via marker comments.
 
     PYTHONPATH=src python -m benchmarks.make_experiments_md
 """
@@ -18,6 +18,7 @@ from benchmarks.common import OUT_DIR, REPO
 DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
 BENCH_JSON = os.path.join(REPO, "BENCH_sssp.json")
 SERVE_JSON = os.path.join(REPO, "BENCH_serve.json")
+DYNAMIC_JSON = os.path.join(REPO, "BENCH_dynamic.json")
 WEAK_CSV = os.path.join(OUT_DIR, "weak_scaling.csv")
 MD = os.path.join(REPO, "EXPERIMENTS.md")
 
@@ -156,6 +157,34 @@ def serve_table(path: str) -> str:
     return "\n".join(rows)
 
 
+def dynamic_table(path: str) -> str:
+    """BENCH_dynamic.json (benchmarks/dynamic_bench.py) -> per-batch-size
+    repair-vs-resolve table plus the gate summary."""
+    with open(path) as f:
+        doc = json.load(f)
+    meta = doc["meta"]
+    rows = [f"jax {meta['jax']} on {meta['backend']}"
+            f"{' (smoke)' if meta.get('smoke') else ''}; medians over "
+            f"{meta['rounds']} chained mutation rounds per batch size "
+            "(each round bitwise-verified against a full re-solve on the "
+            "mutated graph); full = cold frontier solve on the same "
+            "committed overlay operands.",
+            "",
+            "| n | m | batch edges | repair ms | full ms | speedup "
+            "| repair edges | full edges | edge ratio | cone |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in doc["results"]:
+        rows.append(
+            f"| {r['n']} | {r['m']} | {r['batch_edges']} "
+            f"| {r['repair_time_s'] * 1e3:.2f} | {r['full_time_s'] * 1e3:.2f} "
+            f"| {r['speedup']}x | {r['repair_edges']} | {r['full_edges']} "
+            f"| {r['edge_ratio']} | {r['cone_median']} |")
+    gate = doc["gate"]
+    rows += ["", f"**Gate** ({gate['rule']}): "
+                 f"{'PASS' if gate['pass'] else 'FAIL'}"]
+    return "\n".join(rows)
+
+
 def weak_scaling_table(path: str) -> str:
     """experiments/bench/weak_scaling.csv (benchmarks/weak_scaling.py) ->
     fixed-n/proc scaling table: dense column slabs vs the vertex-
@@ -192,6 +221,8 @@ def main():
         text = splice(text, "sssp-bench", bench_tables(BENCH_JSON))
     if os.path.exists(SERVE_JSON):
         text = splice(text, "serve-bench", serve_table(SERVE_JSON))
+    if os.path.exists(DYNAMIC_JSON):
+        text = splice(text, "dynamic-bench", dynamic_table(DYNAMIC_JSON))
     if os.path.exists(WEAK_CSV):
         text = splice(text, "weak-scaling", weak_scaling_table(WEAK_CSV))
     with open(MD, "w") as f:
@@ -199,6 +230,7 @@ def main():
     print(f"wrote tables for {len(recs)} dry-run records"
           f"{' + SSSP bench' if os.path.exists(BENCH_JSON) else ''}"
           f"{' + serve bench' if os.path.exists(SERVE_JSON) else ''}"
+          f"{' + dynamic bench' if os.path.exists(DYNAMIC_JSON) else ''}"
           f"{' + weak scaling' if os.path.exists(WEAK_CSV) else ''}"
           f" into {MD}")
 

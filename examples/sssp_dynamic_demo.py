@@ -1,0 +1,99 @@
+"""Dynamic-graph demo: one graph, interleaved inserts/deletes/queries.
+
+Walks the mutation API end to end on a single road-network-ish graph:
+an initial solve, then a handful of edge inserts, weight updates, and
+deletes — including disconnecting and reconnecting a region — each
+committed as a mutation batch and repaired incrementally
+(dynamic/repair.py), with every repaired distance row spot-checked
+**bitwise** against a fresh ``serial`` solve on the mutated snapshot.
+The same graph is then registered in the serving stack to show the
+mutation tick + selective cache reconciliation in action.
+
+    PYTHONPATH=src python examples/sssp_dynamic_demo.py
+"""
+import numpy as np
+
+from repro.core import csr as C
+from repro.core.api import shortest_paths
+from repro.dynamic import DynamicGraph, repair_sssp, solve_dynamic
+from repro.serve import DistanceCache, GraphRegistry, MicroBatchScheduler
+
+SOURCE = 0
+
+
+def check(dyn, res, label):
+    ref = shortest_paths(dyn.snapshot(), SOURCE, engine="serial")
+    assert np.array_equal(res.dist, ref.dist), f"{label}: dist mismatch"
+    assert np.array_equal(res.pred, ref.pred), f"{label}: pred mismatch"
+    reach = int(np.isfinite(res.dist).sum())
+    print(f"  {label:28s} == serial on snapshot "
+          f"(v{dyn.version}, {reach}/{dyn.n} reachable, "
+          f"{res.edges_relaxed} edges relaxed)")
+
+
+def main():
+    cg = C.random_csr_graph(500, 1500, seed=7)
+    dyn = DynamicGraph(cg, overlay_capacity=64, compact_threshold=48)
+    res = solve_dynamic(dyn, SOURCE)
+    print(f"graph: n={dyn.n}, live arcs={dyn.nnz_live}, "
+          f"initial solve {res.edges_relaxed} edges relaxed")
+    check(dyn, res, "initial solve")
+
+    # a batch of inserts: new shortcuts lower a few rows
+    dyn.add_edge(3, 441, 0.9)
+    dyn.add_edge(17, 202, 2.5)
+    res, stats = repair_sssp(dyn, res, dyn.commit())
+    check(dyn, res, "2 inserts")
+
+    # weight updates in both directions (decrease seeds, increase cones)
+    some = [(u, v) for (u, v) in [(3, 441), (17, 202)]]
+    dyn.update_edge(*some[0], 55.0)        # increase: invalidates a cone
+    dyn.update_edge(*some[1], 0.4)         # decrease: seeds a frontier
+    res, stats = repair_sssp(dyn, res, dyn.commit())
+    print(f"    (cone {stats.cone}, seeds {stats.seeds}, "
+          f"updates {stats.updates})")
+    check(dyn, res, "increase + decrease")
+
+    # delete the source's own tree edges until part of the graph falls off
+    cut = [v for v in np.nonzero(res.pred == SOURCE)[0].tolist()]
+    for v in cut:
+        dyn.delete_edge(SOURCE, v)
+    res, stats = repair_sssp(dyn, res, dyn.commit())
+    print(f"    (cut {len(cut)} tree edges at the source, "
+          f"cone {stats.cone})")
+    check(dyn, res, f"delete {len(cut)} tree edges")
+
+    # reconnect with one cheap highway
+    far = int(np.argmax(np.where(np.isfinite(res.dist), -1.0,
+                                 np.arange(dyn.n, dtype=float))))
+    if not np.isfinite(res.dist[far]):
+        dyn.add_edge(SOURCE, far, 1.0)
+        res, _ = repair_sssp(dyn, res, dyn.commit())
+        check(dyn, res, "reconnect via new edge")
+
+    print(f"overlay {dyn.overlay_used}/{dyn.overlay_capacity} live arcs, "
+          f"{dyn.compactions} compactions so far")
+
+    # the serving stack on the same mutable graph
+    registry = GraphRegistry()
+    sched = MicroBatchScheduler(registry, DistanceCache(64), max_batch=8)
+    registry.register("road", dyn, landmarks=4)
+    for s in (2, 9, 2, 31):
+        sched.submit("road", s)
+    sched.drain()
+    sched.submit_mutation("road", "add", 2, 490, 1.25)
+    sched.submit("road", 2)                # same tick: post-mutation answer
+    (ack, ans) = sched.tick()
+    assert ack.via == "mutate" and ans.query.source == 2
+    ref = shortest_paths(dyn.snapshot(), 2, engine="serial").dist
+    assert np.array_equal(ans.value, ref)
+    s = sched.stats()
+    print(f"serving: mutation tick ok (via {ans.via!r}, version "
+          f"{registry.get('road').version}); cache rows kept "
+          f"{s['rows_kept']}, repaired {s['rows_repaired']}, "
+          f"invalidated {s['rows_invalidated']}")
+    print("all repaired rows bitwise-equal to serial on the mutated graph")
+
+
+if __name__ == "__main__":
+    main()

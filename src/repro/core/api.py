@@ -169,9 +169,10 @@ def shortest_paths(
     sequence can improve it (the Dijkstra settled-set argument).  The
     returned ``dist[target]`` is bitwise-equal to the full solve's, as is
     every entry with ``dist < dist[target]``; entries above it may still
-    sit above their fixpoint, and ``pred`` is only valid on that settled
-    region — a target result is a *partial* solve, so don't cache its row
-    as if it were complete (serve/scheduler.py treats it accordingly).
+    sit above their fixpoint, so a target result is a *partial* solve:
+    its ``pred`` is ``None`` (a part-invalid tree is never recovered)
+    and its row must not be cached as if it were complete
+    (serve/scheduler.py treats it accordingly).
     ``target_lb=`` optionally sharpens the exit with an admissible lower
     bound on the s→t distance (e.g. a serve/landmarks.py ALT bound): the
     loop additionally stops once ``dist[target] <= target_lb``.  The bound
@@ -186,6 +187,16 @@ def shortest_paths(
         raise ValueError(
             f"target= early exit needs a frontier engine "
             f"{FRONTIER_ENGINES}; got {engine!r}")
+
+    from repro.dynamic.overlay import DynamicGraph  # local: dynamic uses api
+
+    if isinstance(g, DynamicGraph):
+        # facade convenience: solve the CURRENT version via its snapshot
+        # CSR (exact by construction).  The overlay-native engines — which
+        # skip the snapshot and keep the jit cache warm across versions —
+        # live in dynamic/repair.py (solve_dynamic / repair_sssp) and are
+        # what the serving layer uses.
+        g = g.snapshot()
 
     if isinstance(g, csr_mod.CsrGraph):
         cg, n_true = g, g.n
@@ -250,8 +261,12 @@ def shortest_paths(
             target=None if target is None else jnp.int32(target),
             target_lb=None if target_lb is None else jnp.float32(target_lb),
         )
-        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine,
-                          edges_relaxed=int(e))
+        # target= solves return pred=None: the partial row's tree would be
+        # part-invalid (see the target docs above), and skipping the O(m)
+        # recovery is the point of the early exit.
+        return SsspResult(np.asarray(d),
+                          None if p is None else np.asarray(p), int(s),
+                          engine, edges_relaxed=int(e))
 
     if engine == "multisource_csr":
         if cg is None:

@@ -29,6 +29,15 @@ import numpy as np
 from repro.core.graph import Graph, INF, random_edge_list
 
 
+def _freeze(*arrays: np.ndarray):
+    """Mark arrays read-only (see CsrGraph.__post_init__'s immutability
+    contract): memoized views are shared across callers, so the builders
+    freeze everything they cache."""
+    for a in arrays:
+        a.flags.writeable = False
+    return arrays if len(arrays) > 1 else arrays[0]
+
+
 def _build_ell(
     indptr: np.ndarray, ids: np.ndarray, weights: np.ndarray,
     n: int, width_multiple: int,
@@ -49,7 +58,7 @@ def _build_ell(
     pos = np.arange(int(indptr[-1])) - np.repeat(indptr[:-1], deg)
     idx[rows, pos] = ids
     w[rows, pos] = weights
-    return idx, w
+    return _freeze(idx, w)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,6 +79,20 @@ class CsrGraph:
     weights: np.ndarray
     n: int
     directed: bool = False
+
+    def __post_init__(self):
+        # Immutability contract: every derived view (dst_ids / ell /
+        # out_csr / out_ell / partitioned / to_dense) is memoized per
+        # instance and SHARED by every later caller — serve/registry.py
+        # pins them on long-lived handles and dynamic/overlay.py layers
+        # mutable overlays on top of a frozen base.  An in-place write to
+        # any field array would silently corrupt whichever memoized views
+        # were already built from it, so the arrays are marked read-only
+        # here (and the memoized views are frozen by their builders).
+        # Mutation goes through dynamic.DynamicGraph, which copies what
+        # it needs; numpy raises ValueError on any write attempt below.
+        for arr in (self.indptr, self.indices, self.weights):
+            arr.flags.writeable = False
 
     @property
     def nnz(self) -> int:
@@ -100,7 +123,7 @@ class CsrGraph:
         the segment-min relax sweep); ascending by construction.  Memoized."""
         def build():
             deg = np.diff(self.indptr)
-            return np.repeat(np.arange(self.n, dtype=np.int32), deg)
+            return _freeze(np.repeat(np.arange(self.n, dtype=np.int32), deg))
         return self._memo("_dst_ids", build)
 
     def ell(self, width_multiple: int = 8) -> tuple[np.ndarray, np.ndarray]:
@@ -141,7 +164,7 @@ class CsrGraph:
             out_w = np.asarray(self.weights)[order]
             counts = np.bincount(src, minlength=self.n)
             indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
-            return indptr, out_dst, out_w
+            return _freeze(indptr, out_dst, out_w)
         return self._memo("_out_csr", build)
 
     def out_ell(self, width_multiple: int = 8) -> tuple[np.ndarray, np.ndarray]:
@@ -213,7 +236,7 @@ class CsrGraph:
             adj = np.full((self.n, self.n), INF, dtype=np.float32)
             np.fill_diagonal(adj, 0.0)
             adj[self.indices, self.dst_ids()] = self.weights
-            return Graph(adj=adj, n=self.n, directed=self.directed)
+            return Graph(adj=_freeze(adj), n=self.n, directed=self.directed)
         return self._memo("_dense", build)
 
 

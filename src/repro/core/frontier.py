@@ -97,12 +97,40 @@ def frontier_operands(cg, *, with_ell: bool = False,
     return ops
 
 
+def _slot_minloop(nd, starts, off, E, m, F, *, chunk: int, emit):
+    """Chunked slot walker shared by the push and pull relax forms: walk
+    ``E`` edge slots ``chunk`` at a time in a ``lax.while_loop`` (trip
+    count tracks the actual slot count, the stream-compaction core of
+    the frontier engines), map each slot to its owning compacted row —
+    ``searchsorted(off, slot, 'right') - 1`` picks the last row whose
+    window starts at or before the slot, landing past zero-degree ties —
+    and its in-window position, then scatter-min whatever ``emit(row,
+    pos, valid) -> (cand, tgt)`` produces (invalid slots must emit INF
+    aimed at a drop id; scatter mode="drop")."""
+
+    def cond(carry):
+        _, c = carry
+        return c * chunk < E
+
+    def body(carry):
+        nd2, c = carry
+        slots = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        valid = slots < E
+        row = jnp.searchsorted(off, slots, side="right") - 1
+        row = jnp.clip(row, 0, F - 1)
+        pos = starts[row] + (slots - off[row])
+        pos = jnp.clip(pos, 0, m - 1)
+        cand, tgt = emit(row, pos, valid)
+        return nd2.at[tgt].min(cand, mode="drop"), c + 1
+
+    nd, _ = lax.while_loop(cond, body, (nd, jnp.int32(0)))
+    return nd
+
+
 def relax_edge_slots(nd, row_dist, starts, off, E, out_dst, out_w, *,
                      chunk: int, drop_id):
     """Scatter-min ``row_dist[row] + w`` over a compacted frontier's edge
-    slots, ``chunk`` slots per inner ``lax.while_loop`` step (trip count
-    tracks the actual slot count E, the stream-compaction core of the
-    frontier engines).
+    slots (the PUSH form of :func:`_slot_minloop`).
 
     Shared by the single-device flat sweep (:func:`make_flat_sweep_fn`)
     and the vertex-partitioned local relax (core/sharded_csr.py) — the
@@ -114,33 +142,48 @@ def relax_edge_slots(nd, row_dist, starts, off, E, out_dst, out_w, *,
     row_dist: (F,) source distance per frontier row; starts/off: each
     row's window start in (out_dst, out_w) / exclusive cumsum of window
     lengths; E: total slots; out-of-window slots produce INF candidates
-    aimed at ``drop_id`` (scatter mode="drop").
+    aimed at ``drop_id``.
     """
     m = out_dst.shape[0]
     if m == 0:                                    # edgeless graph: no work
         return nd
-    F = row_dist.shape[0]
 
-    def cond(carry):
-        _, c = carry
-        return c * chunk < E
-
-    def body(carry):
-        nd2, c = carry
-        slots = c * chunk + jnp.arange(chunk, dtype=jnp.int32)
-        valid = slots < E
-        # slot -> owning frontier row: last row whose window starts at
-        # or before the slot ('right' lands past zero-degree ties).
-        row = jnp.searchsorted(off, slots, side="right") - 1
-        row = jnp.clip(row, 0, F - 1)
-        pos = starts[row] + (slots - off[row])
-        pos = jnp.clip(pos, 0, m - 1)
+    def emit(row, pos, valid):
         cand = jnp.where(valid, row_dist[row] + out_w[pos], INF)
         tgt = jnp.where(valid, out_dst[pos], drop_id)
-        return nd2.at[tgt].min(cand, mode="drop"), c + 1
+        return cand, tgt
 
-    nd, _ = lax.while_loop(cond, body, (nd, jnp.int32(0)))
-    return nd
+    return _slot_minloop(nd, starts, off, E, m, row_dist.shape[0],
+                         chunk=chunk, emit=emit)
+
+
+def pull_edge_slots(nd, fids, src_dist, starts, off, E, in_src, in_w, *,
+                    chunk: int, drop_id):
+    """The PULL form of :func:`_slot_minloop`: scatter-min
+    ``src_dist[in_src[pos]] + in_w[pos]`` into each compacted row's OWN
+    vertex.
+
+    Where the push form relaxes a frontier row's *outgoing* window toward
+    per-slot destinations, this relaxes a row's *incoming* window toward
+    the row itself — ``fids[row]`` is the scatter target and the source
+    distance is gathered per slot.  dynamic/repair.py uses it to re-derive
+    the invalidated cone's labels from its boundary in O(cone in-degree):
+    the compacted rows are the affected vertices, the windows come from
+    the incoming CSR, and non-boundary sources carry INF so only live
+    support contributes.  Sentinel rows (``fids == drop_id``) scatter to
+    ``drop_id`` and are dropped.
+    """
+    m = in_src.shape[0]
+    if m == 0:
+        return nd
+
+    def emit(row, pos, valid):
+        cand = jnp.where(valid, src_dist[in_src[pos]] + in_w[pos], INF)
+        tgt = jnp.where(valid, fids[row], drop_id)
+        return cand, tgt
+
+    return _slot_minloop(nd, starts, off, E, m, fids.shape[0],
+                         chunk=chunk, emit=emit)
 
 
 @functools.lru_cache(maxsize=None)
@@ -169,48 +212,47 @@ def make_flat_sweep_fn(chunk: int = 1024) -> Callable:
     return sweep
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n", "sweep_fn", "max_sweeps", "delta", "chunk")
-)
-def sssp_frontier(
+def sweep_cap(n: int, delta: float | None, max_sweeps: int | None) -> int:
+    """Fixpoint sweep bound shared by every frontier-family engine
+    (sssp_frontier here, sssp_frontier_dynamic / sssp_repair in
+    dynamic/repair.py): the hop-diameter bound n for the plain schedule;
+    4x headroom under Δ-bucketing, whose deferred vertices re-enter later
+    buckets.  The pending-empty exit is the real stop."""
+    if max_sweeps is not None:
+        return max_sweeps
+    return n if delta is None else 4 * n
+
+
+def frontier_fixpoint(
     ops: dict,
-    source: jax.Array,
+    dist0,
+    pending0,
     *,
     n: int,
-    sweep_fn: Optional[Callable] = None,
-    max_sweeps: int | None = None,
+    sweep: Callable,
+    cap: int,
     delta: float | None = None,
-    chunk: int = 1024,
-    target: Optional[jax.Array] = None,
-    target_lb: Optional[jax.Array] = None,
+    target=None,
+    target_lb=None,
+    edges0=0,
 ):
-    """Frontier-compacted fixpoint SSSP on :func:`frontier_operands`.
+    """The frontier relax loop on an ARBITRARY initial state — factored out
+    of :func:`sssp_frontier` so callers with a warm start can reuse the
+    exact machinery (compaction, Δ-bucket schedule, target early exit,
+    edge counter).  dynamic/repair.py seeds it with a mutated graph's
+    partially-invalidated distance vector instead of a cold source.
 
-    Returns ``(dist, pred, num_sweeps, edges_relaxed)`` — the last being
-    the total frontier out-degree summed over sweeps, the engine's actual
-    relaxation work (compare ``nnz * num_sweeps`` for ``bellman_csr``).
+    Correctness contract for a warm start: ``dist0`` must be pointwise >=
+    the true fixpoint with ``dist0[source] == 0``, every finite label must
+    be a real path length in the graph ``ops`` describes, and ``pending0``
+    must cover every vertex whose label has improved relative to what its
+    out-neighbors last saw — the loop then converges to the same fixpoint
+    a cold solve reaches, bitwise (min over the same f32 path sums).
 
-    ``delta`` enables the Δ-bucket schedule (see module docstring): when a
-    bucket drains, the same sweep advances the limit and immediately
-    relaxes the next bucket's active set, so every sweep does edge work —
-    but deferred vertices re-enter later buckets, which can take more
-    sweeps than the plain schedule.  ``chunk`` sizes the inner edge-slot
-    blocks of the default sweep (ignored when ``sweep_fn`` is given).
-
-    ``target`` enables the early-exit stopping rule (module docstring):
-    the loop also stops once ``min(dist[pending]) >= dist[target]`` — or,
-    with an admissible ``target_lb``, once ``dist[target] <= target_lb``.
-    ``dist[target]`` (and every vertex with a smaller label) is then final
-    and bitwise-equal to the full solve; labels above it may be partial,
-    and ``pred`` entries are only valid for the settled region.
+    Must be called inside jit (trace-time only).  Returns
+    ``(dist, sweeps, edges_relaxed)`` with ``edges_relaxed`` accumulated
+    on top of ``edges0``.
     """
-    sweep = sweep_fn or make_flat_sweep_fn(chunk)
-    # Δ-bucketing re-expands deferred vertices across later buckets, so
-    # allow headroom beyond the plain engine's hop-diameter bound; the
-    # pending-empty exit is the real stop.
-    cap = (n if delta is None else 4 * n) if max_sweeps is None else max_sweeps
-    dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
-    pending0 = dist0 < INF
     limit0 = jnp.float32(0.0 if delta is None else delta)
 
     def cond(carry):
@@ -250,7 +292,60 @@ def sssp_frontier(
 
     dist, _, _, sweeps, edges = lax.while_loop(
         cond, body,
-        (dist0, pending0, limit0, jnp.int32(0), jnp.int32(0)),
+        (dist0, pending0, limit0, jnp.int32(0), jnp.int32(edges0)),
     )
+    return dist, sweeps, edges
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "sweep_fn", "max_sweeps", "delta", "chunk")
+)
+def sssp_frontier(
+    ops: dict,
+    source: jax.Array,
+    *,
+    n: int,
+    sweep_fn: Optional[Callable] = None,
+    max_sweeps: int | None = None,
+    delta: float | None = None,
+    chunk: int = 1024,
+    target: Optional[jax.Array] = None,
+    target_lb: Optional[jax.Array] = None,
+):
+    """Frontier-compacted fixpoint SSSP on :func:`frontier_operands`.
+
+    Returns ``(dist, pred, num_sweeps, edges_relaxed)`` — the last being
+    the total frontier out-degree summed over sweeps, the engine's actual
+    relaxation work (compare ``nnz * num_sweeps`` for ``bellman_csr``).
+
+    ``delta`` enables the Δ-bucket schedule (see module docstring): when a
+    bucket drains, the same sweep advances the limit and immediately
+    relaxes the next bucket's active set, so every sweep does edge work —
+    but deferred vertices re-enter later buckets, which can take more
+    sweeps than the plain schedule.  ``chunk`` sizes the inner edge-slot
+    blocks of the default sweep (ignored when ``sweep_fn`` is given).
+
+    ``target`` enables the early-exit stopping rule (module docstring):
+    the loop also stops once ``min(dist[pending]) >= dist[target]`` — or,
+    with an admissible ``target_lb``, once ``dist[target] <= target_lb``.
+    ``dist[target]`` (and every vertex with a smaller label) is then final
+    and bitwise-equal to the full solve; labels above it may be partial,
+    so the returned ``pred`` is None (recovering a part-invalid tree
+    would cost a full O(m) pass every target caller discards).
+    """
+    sweep = sweep_fn or make_flat_sweep_fn(chunk)
+    cap = sweep_cap(n, delta, max_sweeps)
+    dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
+    pending0 = dist0 < INF
+    dist, sweeps, edges = frontier_fixpoint(
+        ops, dist0, pending0, n=n, sweep=sweep, cap=cap, delta=delta,
+        target=target, target_lb=target_lb,
+    )
+    if target is not None:
+        # a target= solve is partial: labels above dist[target] may sit
+        # off their fixpoint, so the O(m) recovery would produce a
+        # part-invalid tree every caller discards anyway — skip it
+        # (trace-time branch: target's presence already keys the trace).
+        return dist, None, sweeps, edges
     pred = predecessors_from_dist_csr(dist, ops, source)
     return dist, pred, sweeps, edges

@@ -1,0 +1,34 @@
+"""Dynamic-graph subsystem: mutable CSR overlays + incremental SSSP repair.
+
+``DynamicGraph`` (overlay.py) is a versioned mutable view over a frozen
+``CsrGraph`` — insertion overlay, weight updates, deletion tombstones,
+threshold-triggered compaction — whose staged operands keep static
+shapes across versions so solves hit the jit cache.  repair.py turns an
+existing fixpoint into the mutated graph's fixpoint incrementally
+(decrease seeds + invalidated-cone rebuild), bitwise-equal to a cold
+solve, and provides the dynamic sweeps the serve layer threads through
+the unchanged core engines.  See README.md §Dynamic graphs.
+"""
+from repro.dynamic.overlay import DynamicGraph, EdgeDelta, MutationBatch
+from repro.dynamic.repair import (RepairStats, dynamic_segment_sweep,
+                                  dynamic_segment_sweep_multi,
+                                  make_dynamic_flat_sweep_fn,
+                                  predecessors_from_dist_dynamic,
+                                  repair_sssp, row_affected, solve_dynamic,
+                                  sssp_frontier_dynamic, sssp_repair)
+
+__all__ = [
+    "DynamicGraph",
+    "EdgeDelta",
+    "MutationBatch",
+    "RepairStats",
+    "dynamic_segment_sweep",
+    "dynamic_segment_sweep_multi",
+    "make_dynamic_flat_sweep_fn",
+    "predecessors_from_dist_dynamic",
+    "repair_sssp",
+    "row_affected",
+    "solve_dynamic",
+    "sssp_frontier_dynamic",
+    "sssp_repair",
+]

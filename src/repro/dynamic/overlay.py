@@ -1,0 +1,461 @@
+"""Mutable CSR overlays — a versioned dynamic view over a frozen base.
+
+Every engine in the repo assumes a frozen graph: ``CsrGraph`` is an
+immutable container (its arrays are read-only and its memoized
+out/ELL/partitioned views depend on that — see CsrGraph.__post_init__),
+so under the "heavy traffic over slowly-changing graphs" regime of
+arXiv:1505.05033 any edge change would force a full container rebuild, a
+device restage, a jit retrace, and a cold cache.  :class:`DynamicGraph`
+makes mutation cheap instead, by layering three small mutable structures
+over an untouched base:
+
+* an **effective-weight copy** of the base arc weights (incoming and
+  outgoing orientations — the two orientations are permutations of one
+  another, so both copies must be written per mutation): weight updates
+  write the new value, deletions write INF (an INF arc can never win a
+  relax min, the container's own padding argument), re-insertions of a
+  deleted base edge reuse its slots;
+* an **insertion overlay**: brand-new arcs land in fixed-capacity padded
+  arrays (``ov_src``/``ov_dst``/``ov_w``; free slots carry the inert
+  (0, n, INF) sentinel).  The capacity is STATIC across versions — the
+  staged device arrays keep their shapes, so repair and full solves hit
+  the jit cache across versions instead of retracing per mutation;
+* **deletion tombstones** are just INF weights (base slots) or freed
+  overlay slots; no arc is ever physically removed between compactions.
+
+``commit()`` turns the pending edits into one :class:`MutationBatch`
+(per-edge net ``w_old -> w_new`` deltas; INF encodes "absent", so a
+delete is an increase-to-INF and an insert a decrease-from-INF — exactly
+the two repair directions dynamic/repair.py distinguishes), bumps the
+version, and refreshes the staged device operands.  Once the live
+overlay crosses ``compact_threshold``, ``compact()`` folds everything
+into a fresh frozen ``CsrGraph`` base (rebuilding its memoized views
+lazily like any other CsrGraph) — the amortized O(m log m) rebuild the
+overlay exists to defer, paid once per threshold-many insertions rather
+than per edit.
+
+The effective arc set always equals ``snapshot()`` — the plain CsrGraph
+of the current version — plus inert INF slots, so any engine run over
+the overlay operands reaches the exact fixpoint a fresh solve on the
+snapshot reaches, bitwise (min over the same f32 path sums).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+from repro.core.csr import CsrGraph
+from repro.core.graph import INF
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDelta:
+    """Net effect of one batch on one edge: ``w_old -> w_new``, with INF
+    meaning "absent" on either side (insert: w_old=INF; delete:
+    w_new=INF).  For undirected graphs (u, v) is the canonical u < v
+    form and the delta applies to both stored arcs."""
+
+    u: int
+    v: int
+    w_old: float
+    w_new: float
+
+
+@dataclasses.dataclass(frozen=True)
+class MutationBatch:
+    """One committed mutation batch: the per-edge net deltas between two
+    consecutive versions (edits that cancelled out are dropped)."""
+
+    version_from: int
+    version_to: int
+    records: tuple
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+
+class DynamicGraph:
+    """Versioned mutable view over a base :class:`CsrGraph`.
+
+    Mutation API (all weights must be finite and > 0 — the repair
+    engines' cone computation walks a predecessor tree, which is only a
+    valid shortest-path tree under strictly positive weights, the same
+    caveat as ``predecessors_from_dist_csr``):
+
+    * ``add_edge(u, v, w)``    — edge must be absent;
+    * ``update_edge(u, v, w)`` — edge must be present;
+    * ``delete_edge(u, v)``    — edge must be present;
+    * ``apply(edit)``          — one ``("add"|"update"|"delete", u, v[, w])``
+      tuple, the registry's wire format.
+
+    Edits take effect on the host immediately; ``commit()`` publishes
+    them as a new version (device operands refreshed, snapshot memo
+    dropped) and returns the :class:`MutationBatch` the repair engines
+    and the serve layer's selective invalidation consume.
+    """
+
+    def __init__(
+        self,
+        base: CsrGraph,
+        *,
+        overlay_capacity: int = 64,
+        compact_threshold: "int | None | str" = "auto",
+    ):
+        """``compact_threshold``: live overlay arcs that trigger an
+        auto-compact at commit.  The default ("auto") is HALF the overlay
+        capacity, leaving headroom so batches smaller than the remaining
+        half cannot overflow the fixed slots — the capacity then stays
+        static and the jit cache holds.  A SINGLE batch netting more
+        inserts than the free slots still grows mid-batch (counted in
+        ``overlay_growths`` — each growth is one retrace); size the
+        capacity to a few times the largest expected batch.  An explicit
+        ``None`` disables
+        auto-compaction entirely; the overlay then GROWS by doubling when
+        full, which is a shape-breaking event (new staged array shapes =
+        one retrace) and unbounded memory under insert-heavy churn — use
+        it only for bounded experiments."""
+        if overlay_capacity < 1:
+            raise ValueError(
+                f"overlay_capacity must be >= 1, got {overlay_capacity}")
+        self.base = base
+        self.directed = base.directed
+        self._version = 0
+        self.compact_threshold = (max(1, overlay_capacity // 2)
+                                  if compact_threshold == "auto"
+                                  else compact_threshold)
+        self.compactions = 0
+        # shape-breaking events: a single batch netting more inserts than
+        # the free slots still grows mid-batch (commit-time compaction
+        # can't help a batch already in flight) — observable here so a
+        # workload whose batches outrun the capacity shows up in stats
+        # instead of silently retracing every engine.
+        self.overlay_growths = 0
+        self._capacity = int(overlay_capacity)
+        self._rebind_base(base)
+        self._pending: "dict[tuple, float]" = {}   # edge key -> w at batch start
+        self._dops: Optional[dict] = None
+        self._snapshot: Optional[CsrGraph] = None
+
+    # -- base binding -----------------------------------------------------
+
+    def _rebind_base(self, base: CsrGraph) -> None:
+        """(Re)build the mutable state over ``base`` (init and compact)."""
+        self.base = base
+        out_indptr, out_dst, out_w = base.out_csr()
+        self._in_w = np.asarray(base.weights, np.float32).copy()
+        self._out_w = np.asarray(out_w, np.float32).copy()
+        self._out_indptr = out_indptr
+        self._out_dst = out_dst
+        C = self._capacity
+        self._ov_src = np.zeros(C, np.int32)
+        self._ov_dst = np.full(C, base.n, np.int32)   # n = scatter-drop pad
+        self._ov_w = np.full(C, INF, np.float32)
+        self._ov_pos: "dict[tuple, int]" = {}         # (u, v) arc -> slot
+        self._ov_free = list(range(C - 1, -1, -1))
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def n(self) -> int:
+        return self.base.n
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    @property
+    def overlay_used(self) -> int:
+        """Live overlay arcs (insertions not yet folded by compact())."""
+        return len(self._ov_pos)
+
+    @property
+    def overlay_capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def nnz_live(self) -> int:
+        """Live arcs of the current version (tombstones excluded)."""
+        return int(np.isfinite(self._in_w).sum()) + len(self._ov_pos)
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes: base container + effective-weight copies + overlay."""
+        return int(self.base.nbytes + self._in_w.nbytes + self._out_w.nbytes
+                   + self._ov_src.nbytes + self._ov_dst.nbytes
+                   + self._ov_w.nbytes)
+
+    @property
+    def staged_nbytes(self) -> int:
+        """Device bytes currently pinned by :meth:`dyn_ops` (0 if never
+        staged); each distinct buffer counted once."""
+        if self._dops is None:
+            return 0
+        return sum({id(a): int(a.nbytes) for a in self._dops.values()
+                    }.values())
+
+    # -- arc addressing ---------------------------------------------------
+
+    def _edge_key(self, u: int, v: int) -> tuple:
+        return (u, v) if self.directed or u < v else (v, u)
+
+    def _base_in_pos(self, u: int, v: int) -> int:
+        """Position of arc u->v in the incoming arrays, or -1.  Row v is
+        sorted by src, so this is a binary search in v's window."""
+        lo, hi = int(self.base.indptr[v]), int(self.base.indptr[v + 1])
+        i = lo + int(np.searchsorted(self.base.indices[lo:hi], u))
+        return i if i < hi and int(self.base.indices[i]) == u else -1
+
+    def _base_out_pos(self, u: int, v: int) -> int:
+        """Position of arc u->v in the outgoing arrays, or -1."""
+        lo, hi = int(self._out_indptr[u]), int(self._out_indptr[u + 1])
+        i = lo + int(np.searchsorted(self._out_dst[lo:hi], v))
+        return i if i < hi and int(self._out_dst[i]) == v else -1
+
+    def weight_of(self, u: int, v: int) -> float:
+        """Effective weight of arc u->v in the current version (INF when
+        absent)."""
+        p = self._base_in_pos(u, v)
+        if p >= 0 and np.isfinite(self._in_w[p]):
+            return float(self._in_w[p])
+        slot = self._ov_pos.get((u, v))
+        return float(self._ov_w[slot]) if slot is not None else float("inf")
+
+    def has_edge(self, u: int, v: int) -> bool:
+        return np.isfinite(self.weight_of(u, v))
+
+    # -- mutation ---------------------------------------------------------
+
+    def _check(self, u: int, v: int) -> tuple:
+        u, v = int(u), int(v)
+        if not (0 <= u < self.n and 0 <= v < self.n):
+            raise IndexError(
+                f"edge endpoints must be in [0, {self.n}); got ({u}, {v})")
+        if u == v:
+            raise ValueError("self-loops are not representable "
+                             "(the 0 diagonal is implicit)")
+        return u, v
+
+    def _grow_overlay(self) -> None:
+        C, C2 = self._capacity, 2 * self._capacity
+        for name in ("_ov_src", "_ov_dst", "_ov_w"):
+            old = getattr(self, name)
+            pad = np.full(C, self.n, np.int32) if name == "_ov_dst" else (
+                np.full(C, INF, np.float32) if name == "_ov_w"
+                else np.zeros(C, np.int32))
+            setattr(self, name, np.concatenate([old, pad]))
+        self._ov_free.extend(range(C2 - 1, C - 1, -1))
+        self._capacity = C2
+        self.overlay_growths += 1
+
+    def _set_arc(self, u: int, v: int, w: float) -> None:
+        """Write one directed arc's effective weight (INF = tombstone)."""
+        p = self._base_in_pos(u, v)
+        if p >= 0:
+            self._in_w[p] = w
+            self._out_w[self._base_out_pos(u, v)] = w
+            return
+        slot = self._ov_pos.get((u, v))
+        if slot is not None:
+            if np.isfinite(w):
+                self._ov_w[slot] = w
+            else:                       # overlay delete frees the slot
+                self._ov_src[slot] = 0
+                self._ov_dst[slot] = self.n
+                self._ov_w[slot] = INF
+                del self._ov_pos[(u, v)]
+                self._ov_free.append(slot)
+            return
+        if not np.isfinite(w):          # deleting an absent arc: no-op
+            return
+        if not self._ov_free:
+            self._grow_overlay()
+        slot = self._ov_free.pop()
+        self._ov_src[slot] = u
+        self._ov_dst[slot] = v
+        self._ov_w[slot] = np.float32(w)
+        self._ov_pos[(u, v)] = slot
+
+    def _record_and_set(self, u: int, v: int, w: float) -> None:
+        key = self._edge_key(u, v)
+        if key not in self._pending:
+            self._pending[key] = self.weight_of(*key)
+        w32 = np.float32(w)
+        self._set_arc(u, v, w32)
+        if not self.directed:
+            self._set_arc(v, u, w32)
+
+    def add_edge(self, u: int, v: int, w: float) -> None:
+        u, v = self._check(u, v)
+        if self.has_edge(u, v):
+            raise ValueError(f"edge ({u}, {v}) already present; "
+                             "use update_edge")
+        if not (np.isfinite(w) and w > 0):
+            raise ValueError(f"edge weights must be finite and > 0, got {w}")
+        self._record_and_set(u, v, w)
+
+    def update_edge(self, u: int, v: int, w: float) -> None:
+        u, v = self._check(u, v)
+        if not self.has_edge(u, v):
+            raise ValueError(f"edge ({u}, {v}) not present; use add_edge")
+        if not (np.isfinite(w) and w > 0):
+            raise ValueError(f"edge weights must be finite and > 0, got {w}")
+        self._record_and_set(u, v, w)
+
+    def delete_edge(self, u: int, v: int) -> None:
+        u, v = self._check(u, v)
+        if not self.has_edge(u, v):
+            raise ValueError(f"edge ({u}, {v}) not present")
+        self._record_and_set(u, v, INF)
+
+    def apply(self, edit: tuple) -> None:
+        """One ``("add"|"update"|"delete", u, v[, w])`` edit — the wire
+        format serve/registry.py's ``mutate()`` forwards."""
+        op = edit[0]
+        if op == "add":
+            self.add_edge(edit[1], edit[2], edit[3])
+        elif op == "update":
+            self.update_edge(edit[1], edit[2], edit[3])
+        elif op == "delete":
+            self.delete_edge(edit[1], edit[2])
+        else:
+            raise ValueError(f"unknown edit op {op!r}; "
+                             "expected add/update/delete")
+
+    # -- versioning -------------------------------------------------------
+
+    def staged_ops(self) -> Optional[dict]:
+        """Shallow copy of the currently staged operands WITHOUT forcing
+        staging (None if :meth:`dyn_ops` was never called).  ``commit()``
+        swaps fresh buffers into the live dict in place, so a caller that
+        needs the pre-commit version — serve/registry.py's mutate hooks
+        recover predecessor trees against it — must take this copy
+        before committing; the jax buffers themselves are immutable."""
+        return dict(self._dops) if self._dops else None
+
+    def rollback(self) -> int:
+        """Undo every uncommitted edit (restore each touched edge to its
+        weight at batch start) and clear the pending record — the
+        atomicity escape hatch registry.mutate uses when an edit in the
+        middle of a batch turns out invalid.  Returns the number of
+        edges restored."""
+        pending, self._pending = self._pending, {}
+        for (u, v), w_old in pending.items():
+            w = np.float32(w_old)
+            self._set_arc(u, v, w)
+            if not self.directed:
+                self._set_arc(v, u, w)
+        return len(pending)
+
+    def commit(self) -> MutationBatch:
+        """Publish the pending edits as a new version.
+
+        Coalesces per-edge (an add+delete in one batch cancels out), and
+        only bumps the version / restages device weights when something
+        net-changed.  Auto-compacts afterwards when the live overlay
+        crossed ``compact_threshold``.
+        """
+        records = []
+        for (u, v), w_old in self._pending.items():
+            w_new = self.weight_of(u, v)
+            if not (w_new == w_old
+                    or (np.isinf(w_new) and np.isinf(w_old))):
+                records.append(EdgeDelta(u, v, float(w_old), float(w_new)))
+        self._pending.clear()
+        if not records:
+            return MutationBatch(self._version, self._version, ())
+        old = self._version
+        self._version += 1
+        self._snapshot = None
+        if (self.compact_threshold is not None
+                and len(self._ov_pos) > self.compact_threshold):
+            # compacting drops the staged operands entirely — don't pay
+            # for a device restage that would be discarded one line later
+            self.compact()
+        elif self._dops is not None:
+            self._restage_mutable()
+        return MutationBatch(old, self._version, tuple(records))
+
+    def compact(self) -> CsrGraph:
+        """Fold the overlay + tombstones into a fresh frozen base CsrGraph
+        (same graph, same version — this changes the representation, not
+        the edge set).  The staged operands are dropped and re-staged
+        lazily with the new base shapes (one jit retrace per compaction,
+        the amortized cost the threshold bounds)."""
+        new_base = self.snapshot()
+        self._rebind_base(new_base)
+        self._dops = None
+        self._snapshot = new_base
+        self.compactions += 1
+        return new_base
+
+    def snapshot(self) -> CsrGraph:
+        """The current version as a plain frozen :class:`CsrGraph` (the
+        verification/compaction view).  Memoized per version."""
+        if self._snapshot is not None:
+            return self._snapshot
+        live = np.isfinite(self._in_w)
+        src = np.asarray(self.base.indices)[live]
+        dst = self.base.dst_ids()[live]
+        w = self._in_w[live]
+        ov_live = self._ov_dst < self.n
+        if ov_live.any():
+            src = np.concatenate([src, self._ov_src[ov_live]])
+            dst = np.concatenate([dst, self._ov_dst[ov_live]])
+            w = np.concatenate([w, self._ov_w[ov_live]])
+        order = np.lexsort((src, dst))                 # by dst, then src
+        dst = dst.astype(np.int64)[order]
+        counts = np.bincount(dst, minlength=self.n)
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        self._snapshot = CsrGraph(
+            indptr=indptr, indices=src[order].astype(np.int32),
+            weights=w[order].astype(np.float32), n=self.n,
+            directed=self.directed)
+        return self._snapshot
+
+    # -- device staging ---------------------------------------------------
+
+    def dyn_ops(self) -> dict:
+        """Staged device operands for the dynamic engines
+        (dynamic/repair.py): the ``csr_operands`` pytree (src/dst/w, with
+        w the EFFECTIVE weights) plus the frontier out-views, the
+        incoming indptr (both with the one-extra-sentinel-row trick of
+        ``frontier_operands``) and the padded overlay triple.  Built
+        lazily; ``commit()`` swaps in fresh weight/overlay buffers while
+        the index arrays stay pinned, so shapes — and therefore the jit
+        cache — are stable across versions until a compaction."""
+        if self._dops is None:
+            import jax.numpy as jnp
+
+            base = self.base
+            in_indptr = np.concatenate(
+                [base.indptr, base.indptr[-1:]]).astype(np.int32)
+            out_indptr = np.concatenate(
+                [self._out_indptr, self._out_indptr[-1:]]).astype(np.int32)
+            self._dops = {
+                "src": jnp.asarray(base.indices),
+                "dst": jnp.asarray(base.dst_ids()),
+                "in_indptr": jnp.asarray(in_indptr),
+                "out_indptr": jnp.asarray(out_indptr),
+                "out_dst": jnp.asarray(self._out_dst),
+            }
+            self._restage_mutable()
+        return self._dops
+
+    def _restage_mutable(self) -> None:
+        # jnp.array (not asarray): on CPU backends asarray may zero-copy
+        # ALIAS the host buffer, and these five mirrors are exactly the
+        # arrays later edits write in place — an aliased staging would
+        # let host writes leak into the "immutable" staged version (and
+        # into the pre-commit old_ops view the repair hooks hold).  The
+        # frozen base index arrays in dyn_ops() may alias freely.
+        import jax.numpy as jnp
+
+        self._dops.update(
+            w=jnp.array(self._in_w),
+            out_w=jnp.array(self._out_w),
+            ov_src=jnp.array(self._ov_src),
+            ov_dst=jnp.array(self._ov_dst),
+            ov_w=jnp.array(self._ov_w),
+        )

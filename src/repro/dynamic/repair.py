@@ -1,0 +1,368 @@
+"""Incremental SSSP repair over a mutated graph — sublinear re-solves.
+
+arXiv:1505.05033's workload observation (repeated queries over
+slowly-changing graphs) makes the full re-solve after every edge change
+the wrong default: most mutations perturb a tiny cone of the distance
+field.  This module repairs an existing fixpoint instead, in two
+directions matched to :class:`~repro.dynamic.overlay.EdgeDelta`'s sign
+(INF encodes "absent", so inserts/deletes are just extreme
+decreases/increases):
+
+* **decrease / insert** — a smaller ``w_new`` can only lower labels.
+  Seed: apply ``dist[u] + w_new`` at each modified arc's head; every
+  head that improved becomes the initial frontier and the standard
+  frontier push propagates the improvement (core/frontier.py's
+  machinery verbatim, Δ-bucket schedule included).
+
+* **increase / delete** — labels can only rise, so the stale region must
+  be found and rebuilt.  The **invalidated cone** is the pred-tree
+  descendant set of the heads whose TREE arc was hit: if a vertex's old
+  tree path survives unweakened its label is still a valid path length,
+  so only tree descendants of hit arcs can be stale (the contrapositive
+  of "label changed ⟹ every old shortest path crossed a hit arc, in
+  particular the tree path").  The cone is computed by pointer-doubling
+  over ``pred`` — O(n log n) vertex work, zero edge relaxations — then
+  reset to +inf and **re-derived from its boundary** with one pull over
+  the cone's incoming windows (``pull_edge_slots``, O(cone in-degree)):
+  non-cone sources carry live labels, cone sources carry INF, so exactly
+  the boundary support lands.  The improved cone vertices seed the same
+  frontier push.
+
+Both directions compose in one call (a mixed batch applies the cone
+reset first, then the decrease seeds, then one shared push), and the
+result is **bitwise-equal to a fresh full solve on the mutated graph**:
+the warm start is pointwise >= the new fixpoint with every finite label
+a real path length, so the relax loop lands on the identical min over
+identical f32 path sums (see ``frontier_fixpoint``'s warm-start
+contract), and the pred tree is re-recovered from (dist, graph) exactly
+as a fresh solve would.
+
+``edges_relaxed`` counts base-arc relax slots (the pull's cone
+in-degree + the push sweeps' frontier out-degrees) — directly comparable
+with a full ``frontier``/``sssp_frontier_dynamic`` re-solve's counter,
+which is what benchmarks/dynamic_bench.py gates on (overlay slots are
+bounded by the static overlay capacity and excluded from both sides).
+
+The module also provides the **dynamic sweeps** that let the unchanged
+core fixpoint engines (bellman_csr / multisource_csr / frontier) run
+directly on :meth:`DynamicGraph.dyn_ops` operands: each sweep is the
+corresponding static sweep plus a scatter-min over the padded overlay
+slots (inert pads aim INF at the drop id).  serve/scheduler.py threads
+them through its batch and target paths so a mutated graph serves
+queries without ever rebuilding a container.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.api import SsspResult
+from repro.core.bellman_csr import segment_relax_sweep
+from repro.core.frontier import (frontier_fixpoint, make_flat_sweep_fn,
+                                 pull_edge_slots, sweep_cap)
+from repro.dynamic.overlay import DynamicGraph, MutationBatch
+
+INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# dynamic sweeps: static machinery + overlay scatter-min
+# ---------------------------------------------------------------------------
+
+def dynamic_segment_sweep(dist: jax.Array, ops: dict) -> jax.Array:
+    """O(m + C) relax sweep on dynamic operands: the base segment-min
+    (tombstoned arcs carry INF and never win) plus a scatter-min over the
+    overlay slots (free slots aim an INF candidate at the drop id n).
+    Drop-in ``sweep_fn`` for ``sssp_bellman_csr``."""
+    nd = segment_relax_sweep(dist, ops)
+    cand = dist[ops["ov_src"]] + ops["ov_w"]
+    return nd.at[ops["ov_dst"]].min(cand, mode="drop")
+
+
+def dynamic_segment_sweep_multi(D: jax.Array, ops: dict) -> jax.Array:
+    """Batched (S, n) twin of :func:`dynamic_segment_sweep` — drop-in
+    ``sweep_fn`` for ``sssp_multisource_csr`` (the scheduler's coalesced
+    batch path on dynamic handles)."""
+    return jax.vmap(lambda d: dynamic_segment_sweep(d, ops))(D)
+
+
+@functools.lru_cache(maxsize=None)
+def make_dynamic_flat_sweep_fn(chunk: int = 1024) -> Callable:
+    """Frontier sweep on dynamic operands: the flat-CSR chunked relax over
+    the effective out-weights, plus the overlay arcs whose source is in
+    the active frontier.  Memoized so the closure identity is a stable
+    jit static (same contract as ``make_flat_sweep_fn``)."""
+    base = make_flat_sweep_fn(chunk)
+
+    def sweep(dist, fids, starts, off, E, fcount, ops):
+        nd = base(dist, fids, starts, off, E, fcount, ops)
+        n = dist.shape[0]
+        # sentinel ids n land in the scratch slot and are sliced away
+        active = jnp.zeros((n + 1,), bool).at[fids].set(True)[:n]
+        cand = jnp.where(active[ops["ov_src"]],
+                         dist[ops["ov_src"]] + ops["ov_w"], INF)
+        return nd.at[ops["ov_dst"]].min(cand, mode="drop")
+
+    return sweep
+
+
+def predecessors_from_dist_dynamic(dist: jax.Array, ops: dict,
+                                   source) -> jax.Array:
+    """Pred recovery at the fixpoint over base + overlay arcs — the same
+    lowest-attaining-source tie-break as ``predecessors_from_dist_csr``,
+    so the tree is bitwise what a fresh solve on the compacted snapshot
+    would recover.  Same strictly-positive-weights validity caveat."""
+    n = dist.shape[0]
+    via_b = dist[ops["src"]] + ops["w"]
+    best = jax.ops.segment_min(
+        via_b, ops["dst"], num_segments=n, indices_are_sorted=True)
+    via_o = dist[ops["ov_src"]] + ops["ov_w"]
+    best = best.at[ops["ov_dst"]].min(via_o, mode="drop")
+    attains_b = via_b <= best[ops["dst"]]
+    u_cand = jnp.where(attains_b, ops["src"].astype(jnp.int32), jnp.int32(n))
+    u_best = jax.ops.segment_min(
+        u_cand, ops["dst"], num_segments=n, indices_are_sorted=True)
+    best_o = best[jnp.clip(ops["ov_dst"], 0, n - 1)]   # pads clamped, dropped
+    attains_o = via_o <= best_o
+    u_cand_o = jnp.where(attains_o, ops["ov_src"].astype(jnp.int32),
+                         jnp.int32(n))
+    u_best = u_best.at[ops["ov_dst"]].min(u_cand_o, mode="drop")
+    reached = jnp.isfinite(dist) & (u_best < n)
+    pred = jnp.where(reached, u_best, -1)
+    return pred.at[source].set(-1)
+
+
+# ---------------------------------------------------------------------------
+# full solves on dynamic operands
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "chunk", "max_sweeps", "delta")
+)
+def sssp_frontier_dynamic(
+    ops: dict,
+    source: jax.Array,
+    *,
+    n: int,
+    chunk: int = 1024,
+    max_sweeps: int | None = None,
+    delta: float | None = None,
+):
+    """Cold frontier solve on dynamic operands (the repair benchmark's
+    fair "full re-solve" baseline, and the initial solve the first repair
+    chains from).  Returns ``(dist, pred, sweeps, edges_relaxed)`` with
+    pred recovered over base + overlay arcs."""
+    sweep = make_dynamic_flat_sweep_fn(chunk)
+    cap = sweep_cap(n, delta, max_sweeps)
+    dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
+    dist, sweeps, edges = frontier_fixpoint(
+        ops, dist0, dist0 < INF, n=n, sweep=sweep, cap=cap, delta=delta)
+    pred = predecessors_from_dist_dynamic(dist, ops, source)
+    return dist, pred, sweeps, edges
+
+
+def solve_dynamic(dyn: DynamicGraph, source: int, *,
+                  delta: float | None = None,
+                  chunk: int = 1024) -> SsspResult:
+    """Full frontier solve of the CURRENT version of ``dyn`` — no
+    container rebuild, exact fixpoint of :meth:`DynamicGraph.snapshot`."""
+    d, p, s, e = sssp_frontier_dynamic(
+        dyn.dyn_ops(), jnp.int32(source), n=dyn.n, chunk=chunk, delta=delta)
+    return SsspResult(np.asarray(d), np.asarray(p), int(s),
+                      "frontier_dynamic", edges_relaxed=int(e),
+                      sources=np.asarray([int(source)], np.int32))
+
+
+# ---------------------------------------------------------------------------
+# the repair engine
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "chunk", "max_sweeps", "delta")
+)
+def sssp_repair(
+    ops: dict,
+    dist_old: jax.Array,
+    pred_old: jax.Array,
+    source: jax.Array,
+    seed_heads: jax.Array,
+    upd_src: jax.Array,
+    upd_dst: jax.Array,
+    upd_w: jax.Array,
+    *,
+    n: int,
+    chunk: int = 1024,
+    max_sweeps: int | None = None,
+    delta: float | None = None,
+):
+    """Repair ``(dist_old, pred_old)`` — a fixpoint of the PREVIOUS
+    version — into the fixpoint of the operands' current version.
+
+    seed_heads: (S,) int32, heads of increased/deleted TREE arcs
+        (``pred_old[head] == tail``), padded with n (dropped);
+    upd_src/upd_dst/upd_w: (U,) decreased/inserted arcs ``(u, v, w_new)``,
+        padded with ``(0, n, INF)`` (dropped/inert).
+
+    S and U are baked into the array shapes, so padding them to fixed
+    buckets keeps every repair on one compiled executable across
+    versions.  Returns ``(dist, pred, sweeps, edges_relaxed, cone)``;
+    dist/pred are bitwise-equal to a cold solve on the mutated graph
+    (module docstring), ``cone`` is the invalidated-cone population.
+    """
+    idx = jnp.arange(n, dtype=jnp.int32)
+    # --- invalidated cone: pred-tree descendants of the seed heads, by
+    # pointer doubling (after k rounds aff[v] sees ancestors within 2^k).
+    aff = jnp.zeros((n,), bool).at[seed_heads].set(True, mode="drop")
+    anc = jnp.where(pred_old >= 0, pred_old, idx).astype(jnp.int32)
+    rounds = max(1, math.ceil(math.log2(max(n, 2))))
+
+    def doubling(_, carry):
+        a, an = carry
+        return a | a[an], an[an]
+
+    aff, _ = lax.fori_loop(0, rounds, doubling, (aff, anc))
+    aff = aff & (idx != source) & jnp.isfinite(dist_old)
+    cone = jnp.sum(aff)
+    dist1 = jnp.where(aff, INF, dist_old)
+    # --- decrease/insert seeds: one scatter-min at the modified heads.
+    cand = dist1[upd_src] + upd_w
+    dist2 = dist1.at[upd_dst].min(cand, mode="drop")
+    # --- pull the cone's boundary support: every arc entering the cone,
+    # compacted windows over the incoming CSR; cone sources carry INF so
+    # only live (boundary) labels contribute.
+    fids = jnp.nonzero(aff, size=n, fill_value=n)[0].astype(jnp.int32)
+    starts = ops["in_indptr"][fids]
+    degs = ops["in_indptr"][fids + 1] - starts
+    csum = jnp.cumsum(degs)
+    E0, off = csum[-1], csum - degs
+    dist3 = pull_edge_slots(
+        dist2, fids, dist2, starts, off, E0, ops["src"], ops["w"],
+        chunk=chunk, drop_id=jnp.int32(n))
+    ov_d = ops["ov_dst"]
+    into_cone = aff[jnp.clip(ov_d, 0, n - 1)] & (ov_d < n)
+    cand_o = jnp.where(into_cone, dist2[ops["ov_src"]] + ops["ov_w"], INF)
+    dist3 = dist3.at[ov_d].min(cand_o, mode="drop")
+    # --- one shared push from everything that moved below its reset.
+    pending0 = dist3 < dist1
+    cap = sweep_cap(n, delta, max_sweeps)
+    dist, sweeps, edges = frontier_fixpoint(
+        ops, dist3, pending0, n=n, sweep=make_dynamic_flat_sweep_fn(chunk),
+        cap=cap, delta=delta, edges0=E0)
+    pred = predecessors_from_dist_dynamic(dist, ops, source)
+    return dist, pred, sweeps, edges, cone
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairStats:
+    """Work accounting of one repair call (result fields aside)."""
+
+    cone: int            # invalidated-cone population (0 for pure decreases)
+    seeds: int           # increase/delete tree-arc heads submitted
+    updates: int         # decrease/insert arc candidates submitted
+    shortcut: bool       # batch provably couldn't change this source's row
+
+
+def _pad_cap(count: int, minimum: int = 8) -> int:
+    """Power-of-two padding bucket, so repeat repairs with different batch
+    sizes land on a handful of compiled shapes (the scheduler's source-
+    bucket trick applied to mutation batches)."""
+    b = minimum
+    while b < count:
+        b *= 2
+    return b
+
+
+def repair_sssp(
+    dyn: DynamicGraph,
+    prev: SsspResult,
+    batch: MutationBatch,
+    *,
+    chunk: int = 1024,
+    delta: float | None = None,
+) -> "tuple[SsspResult, RepairStats]":
+    """Host wrapper: expand ``batch``'s edge deltas into per-arc repair
+    seeds against ``prev`` (solved on the pre-batch version), run
+    :func:`sssp_repair` on ``dyn``'s current operands, and wrap the
+    result.  ``prev`` must carry dist AND pred for ``prev.sources``'s
+    single source (any engine's result works — pred trees only differ in
+    ties, and any tight tree yields a sound cone).
+
+    When no delta can touch this source's row — no decrease improves it
+    and no increase hits a tree arc — the old result is provably still
+    exact and is returned as-is (``stats.shortcut``), the O(1) fast path
+    the serve layer's selective invalidation shares.
+    """
+    if prev.pred is None:
+        raise ValueError("repair needs prev.pred (the cone walks the "
+                         "predecessor tree); recover it first")
+    dist_old = np.asarray(prev.dist, np.float32)
+    pred_old = np.asarray(prev.pred, np.int32)
+    if dist_old.ndim != 1:
+        raise ValueError("repair_sssp repairs one source row at a time")
+    source = (int(prev.sources[0]) if prev.sources is not None
+              else int(np.argmin(dist_old)))
+    seeds: list[int] = []
+    upds: list[tuple] = []
+    for r in batch.records:
+        arcs = ((r.u, r.v),) if dyn.directed else ((r.u, r.v), (r.v, r.u))
+        for a, b in arcs:
+            if r.w_new > r.w_old or (np.isinf(r.w_new)
+                                     and not np.isinf(r.w_old)):
+                if pred_old[b] == a:       # only tree arcs invalidate
+                    seeds.append(b)
+            elif r.w_new < r.w_old or (np.isinf(r.w_old)
+                                       and not np.isinf(r.w_new)):
+                upds.append((a, b, np.float32(r.w_new)))
+    if not seeds and not upds:
+        return prev, RepairStats(cone=0, seeds=0, updates=0, shortcut=True)
+    S, U = _pad_cap(len(seeds)), _pad_cap(len(upds))
+    seed_arr = np.full(S, dyn.n, np.int32)
+    seed_arr[: len(seeds)] = seeds
+    us = np.zeros(U, np.int32)
+    ud = np.full(U, dyn.n, np.int32)
+    uw = np.full(U, np.inf, np.float32)
+    for i, (a, b, w) in enumerate(upds):
+        us[i], ud[i], uw[i] = a, b, w
+    d, p, s, e, cone = sssp_repair(
+        dyn.dyn_ops(), jnp.asarray(dist_old), jnp.asarray(pred_old),
+        jnp.int32(source), jnp.asarray(seed_arr), jnp.asarray(us),
+        jnp.asarray(ud), jnp.asarray(uw),
+        n=dyn.n, chunk=chunk, delta=delta)
+    res = SsspResult(np.asarray(d), np.asarray(p), int(s), "repair",
+                     edges_relaxed=int(e),
+                     sources=np.asarray([source], np.int32))
+    return res, RepairStats(cone=int(cone), seeds=len(seeds),
+                            updates=len(upds), shortcut=False)
+
+
+def row_affected(dist_row: np.ndarray, batch: MutationBatch,
+                 directed: bool = False) -> bool:
+    """Conservative host-side test: can ``batch`` change this solved
+    row at all?  A decrease matters iff it improves some head
+    (``dist[u] + w_new < dist[v]`` in f32, the engines' own arithmetic);
+    an increase matters iff the old arc was tight (``dist[u] + w_old ==
+    dist[v]``) — a slack arc never attains the min, so raising it cannot
+    move any label.  False means the row is still the exact fixpoint of
+    the mutated graph (serve/registry.py keeps such rows across the
+    version bump instead of invalidating them)."""
+    d = np.asarray(dist_row, np.float32)
+    for r in batch.records:
+        arcs = ((r.u, r.v),) if directed else ((r.u, r.v), (r.v, r.u))
+        for a, b in arcs:
+            if np.isfinite(r.w_new) and (r.w_new < r.w_old
+                                         or np.isinf(r.w_old)):
+                if np.float32(d[a] + np.float32(r.w_new)) < d[b]:
+                    return True
+            if np.isfinite(r.w_old) and (r.w_new > r.w_old
+                                         or np.isinf(r.w_new)):
+                if np.isfinite(d[a]) and (
+                        np.float32(d[a] + np.float32(r.w_old)) == d[b]):
+                    return True
+    return False

@@ -146,6 +146,18 @@ def main(argv=None):
               f"dedup saved {s['dedup_saved']}, "
               f"cache hit rate {s['cache']['hit_rate']:.2f} | "
               f"via {s['answered_via']}", flush=True)
+        # end-of-run accounting: the cache and registry counters the
+        # scheduler aggregates but the per-scenario line above elides
+        c, r = s["cache"], s["registry"]
+        print(f"[sssp_serve] {scen}: cache {c['hits']} hits / "
+              f"{c['misses']} misses / {c['evictions']} evictions "
+              f"({c['rows']}/{c['capacity']} rows) | registry "
+              f"{r['graphs']} graphs, {r['bytes_in_use'] / 1e6:.1f} MB "
+              f"in use (budget "
+              f"{'none' if r['byte_budget'] is None else r['byte_budget']}"
+              f"{', OVER' if r['over_budget'] else ''}), "
+              f"{r['registered']} registered / {r['evicted']} evicted",
+              flush=True)
         if verify:
             checked = verify_answers(answers, graphs_by_name)
             print(f"[sssp_serve] {scen}: verified bitwise vs serial "

@@ -12,9 +12,10 @@ generates the synthetic open-loop traces the driver
 from repro.serve.cache import DistanceCache
 from repro.serve.landmarks import LandmarkSet, build_landmarks
 from repro.serve.registry import GraphHandle, GraphRegistry
-from repro.serve.scheduler import Answer, MicroBatchScheduler, Query
-from repro.serve.workload import (LatencyRecorder, SCENARIOS, TraceEvent,
-                                  make_trace)
+from repro.serve.scheduler import (Answer, MicroBatchScheduler, Mutation,
+                                   Query)
+from repro.serve.workload import (LatencyRecorder, MutationEvent, SCENARIOS,
+                                  TraceEvent, make_churn_trace, make_trace)
 
 __all__ = [
     "Answer",
@@ -24,9 +25,12 @@ __all__ = [
     "LandmarkSet",
     "LatencyRecorder",
     "MicroBatchScheduler",
+    "Mutation",
+    "MutationEvent",
     "Query",
     "SCENARIOS",
     "TraceEvent",
     "build_landmarks",
+    "make_churn_trace",
     "make_trace",
 ]

@@ -72,11 +72,23 @@ class DistanceCache:
             self._rows.popitem(last=False)
             self.evictions += 1
 
+    def pop(self, key: Hashable) -> Optional[np.ndarray]:
+        """Remove and return one row without touching the hit/miss
+        counters (the mutation path's selective invalidation and
+        re-keying are bookkeeping, not query traffic)."""
+        return self._rows.pop(key, None)
+
+    def keys_for(self, graph: Hashable) -> list:
+        """All keys belonging to ``graph``, LRU-first (keys start with
+        the graph name whatever their arity — versioned dynamic keys are
+        ``(graph, version, source)``, static ones ``(graph, source)``)."""
+        return [k for k in self._rows if k[0] == graph]
+
     def purge_graph(self, graph: Hashable) -> int:
-        """Drop every row belonging to ``graph`` (keys are ``(graph,
-        source)`` tuples) — wired to registry eviction so a re-registered
-        name can never serve rows of the evicted graph."""
-        stale = [k for k in self._rows if k[0] == graph]
+        """Drop every row belonging to ``graph`` — every VERSION of it,
+        since all keys lead with the name — wired to registry eviction so
+        a re-registered name can never serve rows of the evicted graph."""
+        stale = self.keys_for(graph)
         for k in stale:
             del self._rows[k]
         return len(stale)

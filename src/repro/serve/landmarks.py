@@ -125,18 +125,28 @@ def sample_landmark_ids(n: int, k: int, *, seed: int = 0) -> np.ndarray:
 
 
 def build_landmarks(cg, k: int, *, seed: int = 0,
-                    csr_ops: dict | None = None) -> LandmarkSet:
+                    csr_ops: dict | None = None,
+                    ids: np.ndarray | None = None,
+                    sweep_fn=None) -> LandmarkSet:
     """One batched multisource solve over K sampled landmarks.
 
     ``csr_ops`` lets the registry reuse its staged device operands; by
     default the arrays are staged ad hoc (same cost as one scheduler
     tick's staging).  Directed graphs are refused — see module docstring.
+
+    ``ids`` pins the landmark set instead of sampling — the lazy refresh
+    after a graph mutation re-solves the SAME landmarks on the new
+    version, so bound quality doesn't jitter with churn.  ``sweep_fn``
+    threads a custom relax sweep to the engine (the dynamic-overlay sweep
+    of dynamic/repair.py, for graphs registered as ``DynamicGraph``).
     """
     if getattr(cg, "directed", False):
         raise ValueError(
             "landmark bounds need symmetric distances; refusing to build "
             "an inadmissible bound for a directed graph")
-    ids = sample_landmark_ids(cg.n, k, seed=seed)
+    if ids is None:
+        ids = sample_landmark_ids(cg.n, k, seed=seed)
     ops = csr_ops if csr_ops is not None else csr_operands(cg)
-    D, _ = sssp_multisource_csr(ops, ids, n=cg.n)
-    return LandmarkSet(ids=ids, D=np.asarray(D))
+    D, _ = sssp_multisource_csr(ops, np.asarray(ids, np.int32), n=cg.n,
+                                sweep_fn=sweep_fn)
+    return LandmarkSet(ids=np.asarray(ids, np.int32), D=np.asarray(D))

@@ -22,12 +22,20 @@ and drops the handle so its device buffers can be freed.  The most
 recently touched graph is never evicted — a single graph over budget is
 admitted (and flagged in ``stats()``) rather than leaving the server
 empty.
+
+Graphs registered as :class:`~repro.dynamic.DynamicGraph` get
+**versioned handles**: ``mutate()`` edits edges in place, commits them
+as one batch, stales the landmark set only when a landmark row is
+actually touched (lazy re-solve on next use), and fires the mutate
+hooks through which the scheduler keeps, repairs, or invalidates the
+graph's cached distance rows — see serve/scheduler.py and
+dynamic/repair.py.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable, Iterable, Optional
 
 from repro.core import csr as csr_mod
 from repro.core import graph as graph_mod
@@ -43,21 +51,56 @@ def _tree_bytes(ops: Optional[dict]) -> int:
 
 @dataclasses.dataclass
 class GraphHandle:
-    """One registered graph: the CSR container plus lazily staged views."""
+    """One registered graph: the CSR container plus lazily staged views.
+
+    A graph registered as a :class:`~repro.dynamic.DynamicGraph` makes
+    the handle **versioned**: ``version`` tracks the overlay's committed
+    mutation batches, both operand views resolve to the overlay's
+    static-shape device arrays, the ``*_sweep_fn`` accessors return the
+    dynamic sweeps the engines need on those operands, and ``row_key``
+    scopes cache rows to ``(name, version, source)`` so a stale version's
+    row can never answer a query against a newer graph.
+    """
 
     name: str
-    cg: csr_mod.CsrGraph
+    # static container; None for dynamic handles (whose container is
+    # dyn.base and is REBOUND by compaction — pinning it here would both
+    # retain the pre-compaction base forever and hide it from nbytes)
+    cg: Optional[csr_mod.CsrGraph] = None
     landmarks: Optional[LandmarkSet] = None
+    dyn: Optional[object] = None               # repro.dynamic.DynamicGraph
+    landmarks_stale: bool = False
+    landmark_refreshes: int = 0
+    landmark_seed: int = 0
     _csr_ops: Optional[dict] = dataclasses.field(default=None, repr=False)
     _frontier_ops: Optional[dict] = dataclasses.field(default=None,
                                                       repr=False)
 
     @property
     def n(self) -> int:
-        return self.cg.n
+        return self.dyn.n if self.dyn is not None else self.cg.n
+
+    @property
+    def version(self) -> int:
+        """Committed mutation-batch count (0 for static graphs)."""
+        return self.dyn.version if self.dyn is not None else 0
+
+    def row_key(self, source: int) -> tuple:
+        """Cache key for this graph's ``source`` row at the CURRENT
+        version.  Static graphs keep the plain ``(name, source)`` form;
+        dynamic graphs interpose the version so every mutation batch
+        implicitly retires the old keys (survivors are re-keyed by the
+        scheduler's selective-invalidation hook)."""
+        if self.dyn is None:
+            return (self.name, source)
+        return (self.name, self.dyn.version, source)
 
     def csr_ops(self) -> dict:
-        """Staged segment-min operands (multisource / bellman_csr path)."""
+        """Staged segment-min operands (multisource / bellman_csr path).
+        Dynamic handles resolve to the overlay operand dict, a superset
+        of the static pytree with effective weights."""
+        if self.dyn is not None:
+            return self.dyn.dyn_ops()
         if self._csr_ops is None:
             self._csr_ops = csr_operands(self.cg)
         return self._csr_ops
@@ -66,16 +109,56 @@ class GraphHandle:
         """Staged frontier operands (the ``target=`` point-to-point path).
         Supersets csr_ops, whose staged arrays are reused — only the
         outgoing views are uploaded on top."""
+        if self.dyn is not None:
+            return self.dyn.dyn_ops()
         if self._frontier_ops is None:
             self._frontier_ops = frontier_operands(
                 self.cg, base_ops=self.csr_ops())
         return self._frontier_ops
 
+    def multisource_sweep_fn(self):
+        """``sweep_fn`` the batched engine needs on this handle's operands
+        (None = the engine's static default)."""
+        if self.dyn is None:
+            return None
+        from repro.dynamic.repair import dynamic_segment_sweep_multi
+
+        return dynamic_segment_sweep_multi
+
+    def frontier_sweep_fn(self):
+        """``sweep_fn`` the frontier engine needs on this handle's
+        operands (None = the engine's static default)."""
+        if self.dyn is None:
+            return None
+        from repro.dynamic.repair import make_dynamic_flat_sweep_fn
+
+        return make_dynamic_flat_sweep_fn()
+
+    def landmarks_ready(self) -> Optional[LandmarkSet]:
+        """The landmark set, lazily re-solved if a mutation staled it —
+        the deferred half of the mutate() contract: staling is O(K) host
+        tests at mutation time, the K-source re-solve only happens when a
+        query actually consults the bounds (same ids, new version)."""
+        if self.landmarks is not None and self.landmarks_stale:
+            self.landmarks = build_landmarks(
+                self.dyn if self.dyn is not None else self.cg,
+                self.landmarks.k, csr_ops=self.csr_ops(),
+                ids=self.landmarks.ids,
+                sweep_fn=self.multisource_sweep_fn())
+            self.landmarks_stale = False
+            self.landmark_refreshes += 1
+        return self.landmarks
+
     @property
     def nbytes(self) -> int:
-        """Host CSR + landmark rows + every distinct staged device array
-        (frontier_ops shares csr_ops' arrays; count each buffer once)."""
-        total = self.cg.nbytes
+        """Host container + landmark rows + every distinct staged device
+        array (frontier_ops shares csr_ops' arrays; count each buffer
+        once).  Dynamic handles account the overlay's host mirrors and
+        staged buffers through the overlay's own counters."""
+        if self.dyn is not None:
+            total = self.dyn.nbytes + self.dyn.staged_nbytes
+        else:
+            total = self.cg.nbytes
         if self.landmarks is not None:
             total += self.landmarks.nbytes
         seen = {}
@@ -98,8 +181,11 @@ class GraphRegistry:
         self._graphs: "collections.OrderedDict[str, GraphHandle]" = (
             collections.OrderedDict())
         self._on_evict: list[Callable[[str], None]] = []
+        self._on_mutate: list[Callable] = []
         self.registered = 0
         self.evicted = 0
+        self.mutations = 0
+        self.edges_mutated = 0
 
     def __len__(self) -> int:
         return len(self._graphs)
@@ -118,28 +204,98 @@ class GraphRegistry:
     def add_evict_hook(self, fn: Callable[[str], None]) -> None:
         self._on_evict.append(fn)
 
+    def add_mutate_hook(self, fn: Callable) -> None:
+        """``fn(name, handle, batch, old_ops)`` runs after every committed
+        mutation batch: ``batch`` is the overlay's MutationBatch and
+        ``old_ops`` the PRE-commit staged operands (None if the graph was
+        never staged) — jax buffers are immutable, so holding the old
+        dict long enough to recover predecessor trees against the
+        previous version is free.  The scheduler's selective cache
+        invalidation/repair lives here."""
+        self._on_mutate.append(fn)
+
     def register(
         self,
         name: str,
-        g: "graph_mod.Graph | csr_mod.CsrGraph",
+        g: "graph_mod.Graph | csr_mod.CsrGraph | object",
         *,
         landmarks: int = 0,
         landmark_seed: int = 0,
     ) -> GraphHandle:
         """Admit a graph under ``name`` (replacing any previous holder of
         the name, which counts as an eviction).  ``landmarks=K`` runs the
-        one-time ALT precompute (serve/landmarks.py) before admission."""
-        cg = g if isinstance(g, csr_mod.CsrGraph) else g.to_csr()
-        handle = GraphHandle(name=name, cg=cg)
+        one-time ALT precompute (serve/landmarks.py) before admission.
+        A :class:`~repro.dynamic.DynamicGraph` is admitted as a versioned
+        mutable handle (see GraphHandle) whose edges ``mutate()`` can
+        edit in place."""
+        from repro.dynamic.overlay import DynamicGraph
+
+        if isinstance(g, DynamicGraph):
+            handle = GraphHandle(name=name, dyn=g)
+        else:
+            cg = g if isinstance(g, csr_mod.CsrGraph) else g.to_csr()
+            handle = GraphHandle(name=name, cg=cg)
+        handle.landmark_seed = landmark_seed
         if landmarks:
             handle.landmarks = build_landmarks(
-                cg, landmarks, seed=landmark_seed, csr_ops=handle.csr_ops())
+                handle.dyn if handle.dyn is not None else handle.cg,
+                landmarks, seed=landmark_seed, csr_ops=handle.csr_ops(),
+                sweep_fn=handle.multisource_sweep_fn())
         if name in self._graphs:
             self._evict(name)
         self._graphs[name] = handle
         self.registered += 1
         self._maybe_evict()
         return handle
+
+    def mutate(self, name: str, edits: Iterable[tuple]) -> "object":
+        """Apply one batch of edge edits to a dynamic graph and publish
+        the new version.
+
+        ``edits`` is an iterable of ``("add"|"update"|"delete", u, v[,
+        w])`` tuples, applied in order and committed as ONE batch (the
+        repair granularity).  On commit: the landmark set is staled only
+        if some landmark row is actually affected (the O(K·batch) host
+        tightness test of dynamic/repair.row_affected) and re-solved
+        lazily on next use; the mutate hooks then run with the pre-commit
+        operands so the scheduler can keep/repair/invalidate cache rows
+        per source (see add_mutate_hook).  Returns the MutationBatch.
+        """
+        from repro.dynamic.repair import row_affected
+
+        if name not in self._graphs:
+            raise KeyError(f"graph {name!r} is not registered")
+        handle = self._graphs[name]
+        self._graphs.move_to_end(name)
+        if handle.dyn is None:
+            raise ValueError(
+                f"graph {name!r} is static; register a DynamicGraph to "
+                "mutate it")
+        # pre-commit staged view (or None): commit swaps buffers into the
+        # live operand dict in place, and the mutate hooks need the
+        # previous version's buffers to recover pred trees for repair.
+        old_ops = handle.dyn.staged_ops()
+        try:
+            for edit in edits:
+                handle.dyn.apply(edit)
+        except Exception:
+            # a bad edit mid-batch must not leak the earlier edits into
+            # the next commit: the batch applies atomically or not at all
+            handle.dyn.rollback()
+            raise
+        batch = handle.dyn.commit()
+        if batch.records:
+            self.mutations += 1
+            self.edges_mutated += len(batch.records)
+            ls = handle.landmarks
+            if ls is not None and not handle.landmarks_stale:
+                handle.landmarks_stale = any(
+                    row_affected(ls.D[k], batch, handle.dyn.directed)
+                    for k in range(ls.k))
+            for fn in self._on_mutate:
+                fn(name, handle, batch, old_ops)
+            self._maybe_evict()             # restaged buffers may have grown
+        return batch
 
     def get(self, name: str) -> GraphHandle:
         """Fetch a handle, refreshing its LRU recency."""
@@ -180,4 +336,8 @@ class GraphRegistry:
                             and self.bytes_in_use > self.byte_budget),
             "registered": self.registered,
             "evicted": self.evicted,
+            "mutations": self.mutations,
+            "edges_mutated": self.edges_mutated,
+            "landmark_refreshes": sum(h.landmark_refreshes
+                                      for h in self._graphs.values()),
         }

@@ -26,6 +26,17 @@ partial by construction, so it is never cached.
 Every path returns bytes some engine solved (or a bound that *proves* the
 value), so served answers stay bitwise-equal to per-query ``serial``
 solves — the invariant tests/test_serve.py and the --smoke driver verify.
+
+Graphs registered as :class:`~repro.dynamic.DynamicGraph` additionally
+accept **mutation ticks**: ``submit_mutation`` queues edge edits that
+``tick()`` applies BEFORE the tick's queries, one committed batch per
+graph.  The registry's mutate hook then reconciles the distance cache
+per row — rows no delta can touch are re-keyed to the new version
+untouched, up to ``repair_rows`` hot rows are repaired incrementally
+(dynamic/repair.py), the rest invalidated — and the landmark set stales
+lazily.  Engine paths pick up each handle's dynamic sweeps so solves run
+on the mutable overlay operands directly, preserving the bitwise
+guarantee against the mutated snapshot.
 """
 from __future__ import annotations
 
@@ -42,7 +53,8 @@ from repro.core.frontier import sssp_frontier
 from repro.serve.cache import DistanceCache
 from repro.serve.registry import GraphRegistry
 
-VIAS = ("trivial", "cache", "landmark", "batch", "target", "error")
+VIAS = ("trivial", "cache", "landmark", "batch", "target", "mutate",
+        "error")
 
 
 @dataclasses.dataclass
@@ -58,10 +70,24 @@ class Query:
 
 
 @dataclasses.dataclass
+class Mutation:
+    """One edge-edit request against a dynamic graph: ``edit`` is the
+    registry wire tuple ``("add"|"update"|"delete", u, v[, w])``.  All of
+    a graph's mutations drained in one tick commit as ONE version bump
+    (the repair batch granularity)."""
+
+    qid: int
+    graph: str
+    edit: tuple
+    arrival: float = 0.0
+
+
+@dataclasses.dataclass
 class Answer:
-    query: Query
-    value: "np.ndarray | float | None"  # (n,) row for sssp, float for
-                                        # dist; None iff via == "error"
+    query: "Query | Mutation"
+    value: "np.ndarray | float | int | None"  # (n,) row for sssp, float
+                                        # for dist, new version int for
+                                        # mutate; None iff via == "error"
     via: str                            # one of VIAS
     done_at: float = 0.0                # stamped by the driver (wall clock)
 
@@ -79,6 +105,7 @@ class MicroBatchScheduler:
         *,
         max_batch: int = 16,
         p2p_solo: bool = True,
+        repair_rows: int = 8,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -86,8 +113,11 @@ class MicroBatchScheduler:
         self.cache = cache
         self.max_batch = max_batch
         self.p2p_solo = p2p_solo
+        self.repair_rows = repair_rows
         registry.add_evict_hook(cache.purge_graph)
+        registry.add_mutate_hook(self._on_mutate)
         self._queue: "collections.deque[Query]" = collections.deque()
+        self._mutations: "collections.deque[Mutation]" = collections.deque()
         self._next_qid = 0
         self.ticks = 0
         self.engine_batches = 0
@@ -95,6 +125,11 @@ class MicroBatchScheduler:
         self.target_solves = 0
         self.dedup_saved = 0
         self.occupancy_sum = 0.0
+        self.rows_kept = 0
+        self.rows_repaired = 0
+        self.rows_invalidated = 0
+        self.repair_edges = 0
+        self.last_mutation_error: Optional[str] = None
         self.answered_via = {v: 0 for v in VIAS}
 
     # -- queue ------------------------------------------------------------
@@ -108,9 +143,99 @@ class MicroBatchScheduler:
         self._queue.append(q)
         return q
 
+    def submit_mutation(self, graph: str, op: str, u: int, v: int,
+                        w: Optional[float] = None, *,
+                        arrival: float = 0.0) -> Mutation:
+        """Queue one edge edit against a dynamic graph.  Edits are
+        applied at the START of the next tick (before any query drained
+        in the same tick is answered), all of a graph's pending edits
+        committing as one mutation batch."""
+        edit = (op, int(u), int(v)) if w is None else (op, int(u), int(v),
+                                                       float(w))
+        m = Mutation(qid=self._next_qid, graph=graph, edit=edit,
+                     arrival=arrival)
+        self._next_qid += 1
+        self._mutations.append(m)
+        return m
+
     @property
     def pending(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + len(self._mutations)
+
+    # -- mutation ticks ---------------------------------------------------
+
+    def _apply_mutations(self) -> list:
+        """Drain the mutation queue: one ``registry.mutate`` batch per
+        graph (the registry fires :meth:`_on_mutate` to reconcile the
+        cache), acked with via="mutate" answers whose value is the
+        graph's new version."""
+        if not self._mutations:
+            return []
+        drained, self._mutations = list(self._mutations), collections.deque()
+        by_graph: "collections.OrderedDict[str, list]" = (
+            collections.OrderedDict())
+        for m in drained:
+            by_graph.setdefault(m.graph, []).append(m)
+        acks = []
+        for name, muts in by_graph.items():
+            try:
+                self.registry.mutate(name, [m.edit for m in muts])
+                version = self.registry.get(name).version
+                acks.extend(Answer(m, version, "mutate") for m in muts)
+            except (KeyError, ValueError, IndexError) as e:
+                # unknown/static graph or invalid edit: fail the whole
+                # graph's batch — a half-applied batch would leave the
+                # trace's edge-set bookkeeping unverifiable.
+                acks.extend(Answer(m, None, "error") for m in muts)
+                self.last_mutation_error = str(e)
+        return acks
+
+    def _on_mutate(self, name, handle, batch, old_ops) -> None:
+        """Registry mutate hook: reconcile this graph's cached rows with
+        the new version.  Per row (hottest first): if no delta can touch
+        it (dynamic/repair.row_affected) it is RE-KEYED to the new
+        version untouched; otherwise up to ``repair_rows`` rows are
+        REPAIRED in place (pred recovered against the pre-commit
+        operands, then one incremental repair on the new ones —
+        dynamic/repair.py) and the rest are invalidated."""
+        import jax.numpy as jnp
+
+        from repro.core.api import SsspResult
+        from repro.dynamic.repair import (predecessors_from_dist_dynamic,
+                                          repair_sssp, row_affected)
+
+        if not batch.records:
+            return
+        # walk LRU -> MRU so the re-puts (which append at the MRU end)
+        # PRESERVE the graph's recency order; the repair budget still
+        # goes to the hottest rows — the affected keys nearest the MRU
+        # end — by slicing the affected list from its tail.
+        keys = self.cache.keys_for(name)
+        rows = {k: self.cache.peek(k) for k in keys}
+        affected = {k for k in keys
+                    if row_affected(rows[k], batch, handle.dyn.directed)}
+        budget = self.repair_rows if old_ops is not None else 0
+        repair = set([k for k in keys if k in affected][-budget:]
+                     if budget else [])
+        for key in keys:
+            source = key[-1]
+            row = rows[key]
+            self.cache.pop(key)
+            if key not in affected:
+                self.cache.put(handle.row_key(source), row)
+                self.rows_kept += 1
+            elif key in repair:
+                pred = predecessors_from_dist_dynamic(
+                    jnp.asarray(row), old_ops, jnp.int32(source))
+                prev = SsspResult(
+                    dist=row, pred=np.asarray(pred), sweeps=None,
+                    engine="cache", sources=np.asarray([source], np.int32))
+                res, _ = repair_sssp(handle.dyn, prev, batch)
+                self.cache.put(handle.row_key(source), res.dist)
+                self.rows_repaired += 1
+                self.repair_edges += res.edges_relaxed or 0
+            else:
+                self.rows_invalidated += 1
 
     # -- answer-without-engine paths --------------------------------------
 
@@ -126,11 +251,11 @@ class MicroBatchScheduler:
         """
         if q.target is not None and q.target == q.source:
             return Answer(q, 0.0, "trivial")
-        row = self.cache.get((q.graph, q.source))
+        row = self.cache.get(handle.row_key(q.source))
         if row is not None:
             val = row if q.target is None else float(row[q.target])
             return Answer(q, val, "cache")
-        ls = handle.landmarks
+        ls = handle.landmarks_ready()
         if ls is not None:
             row = ls.row_of(q.source)
             if row is not None:
@@ -163,11 +288,13 @@ class MicroBatchScheduler:
         ops = handle.frontier_ops()
         self.registry.touch_staged(handle.name)
         lb = None
-        if handle.landmarks is not None:
-            lb = handle.landmarks.conservative_lb(q.source, q.target)
+        ls = handle.landmarks_ready()
+        if ls is not None:
+            lb = ls.conservative_lb(q.source, q.target)
             lb = None if not np.isfinite(lb) else jnp.float32(lb)
         d, _, _, _ = sssp_frontier(
             ops, jnp.int32(q.source), n=handle.n,
+            sweep_fn=handle.frontier_sweep_fn(),
             target=jnp.int32(q.target), target_lb=lb,
         )
         self.target_solves += 1
@@ -183,7 +310,8 @@ class MicroBatchScheduler:
         bucket = self._bucket(len(distinct))
         padded = distinct + [distinct[0]] * (bucket - len(distinct))
         D, _ = sssp_multisource_csr(
-            handle.csr_ops(), jnp.asarray(padded, jnp.int32), n=handle.n)
+            handle.csr_ops(), jnp.asarray(padded, jnp.int32), n=handle.n,
+            sweep_fn=handle.multisource_sweep_fn())
         self.registry.touch_staged(handle.name)
         rows = np.asarray(D)
         self.engine_batches += 1
@@ -194,7 +322,7 @@ class MicroBatchScheduler:
         out = []
         for q in queries:
             row = by_source[q.source]
-            self.cache.put((q.graph, q.source), row)
+            self.cache.put(handle.row_key(q.source), row)
             val = row if q.target is None else float(row[q.target])
             out.append(Answer(q, val, "batch"))
         return out
@@ -202,12 +330,20 @@ class MicroBatchScheduler:
     # -- the tick ---------------------------------------------------------
 
     def tick(self) -> list:
-        """Drain the queue once; returns the Answers produced this tick
+        """Drain the queues once; returns the Answers produced this tick
         (overflow beyond max_batch distinct sources per graph is requeued
-        ahead of newer arrivals)."""
-        if not self._queue:
+        ahead of newer arrivals).  Pending mutations are applied FIRST —
+        one committed batch per graph — so every query drained in the
+        same tick is answered against the post-mutation version (the
+        interleaving contract launch/sssp_dynamic.py's verifier pins)."""
+        if not self._queue and not self._mutations:
             return []
         self.ticks += 1
+        mut_acks = self._apply_mutations()
+        if not self._queue:
+            for a in mut_acks:
+                self.answered_via[a.via] += 1
+            return mut_acks
         batch, self._queue = list(self._queue), collections.deque()
         by_graph: "collections.OrderedDict[str, list]" = (
             collections.OrderedDict())
@@ -252,14 +388,15 @@ class MicroBatchScheduler:
                 answers.extend(self._solve_batch(handle, take))
         for q in reversed(requeue):
             self._queue.appendleft(q)
+        answers = mut_acks + answers
         for a in answers:
             self.answered_via[a.via] += 1
         return answers
 
     def drain(self) -> list:
-        """Tick until the queue is empty (closed-loop replay)."""
+        """Tick until the queues are empty (closed-loop replay)."""
         out = []
-        while self._queue:
+        while self.pending:
             out.extend(self.tick())
         return out
 
@@ -278,6 +415,10 @@ class MicroBatchScheduler:
             "target_solves": self.target_solves,
             "dedup_saved": self.dedup_saved,
             "mean_occupancy": round(self.mean_occupancy, 4),
+            "rows_kept": self.rows_kept,
+            "rows_repaired": self.rows_repaired,
+            "rows_invalidated": self.rows_invalidated,
+            "repair_edges": self.repair_edges,
             "answered_via": dict(self.answered_via),
             "cache": self.cache.stats(),
             "registry": self.registry.stats(),

@@ -41,6 +41,19 @@ class TraceEvent:
     target: Optional[int]       # None => full sssp row
 
 
+@dataclasses.dataclass(frozen=True)
+class MutationEvent:
+    """One edge edit in a churn trace (see :func:`make_churn_trace`).
+    ``op`` is the registry wire verb; ``w`` is None for deletes."""
+
+    arrival: float
+    graph: str
+    op: str                     # "add" | "update" | "delete"
+    u: int
+    v: int
+    w: Optional[float]
+
+
 def zipf_vertices(rng: np.random.Generator, n: int, size: int,
                   a: float = 1.1,
                   perm: Optional[np.ndarray] = None) -> np.ndarray:
@@ -106,6 +119,118 @@ def make_trace(
         if scenario == "p2p" and p2p_draw[i] < p2p_frac:
             tgt = int(pools[gi][2 * i + 1])
         events.append(TraceEvent(float(arrivals[i]), name, src, tgt))
+    return events
+
+
+class EdgeChurn:
+    """Seeded edge-mutation sampler over an evolving undirected edge set —
+    the single source of churn sampling, shared by :func:`make_churn_trace`
+    (which emits :class:`MutationEvent`\\ s) and benchmarks/dynamic_bench.py
+    (which applies the edits directly to a DynamicGraph).
+
+    Deletes and updates pick a uniformly random LIVE edge (swap-pop
+    list); adds rejection-sample an absent pair; op is uniform over
+    add/update/delete.  The internal mirror evolves with every sample,
+    so any sampled sequence is valid when applied in order.
+    """
+
+    def __init__(self, cg, rng: np.random.Generator, *,
+                 max_weight: float = 100.0):
+        if getattr(cg, "directed", False):
+            raise ValueError("churn traces assume undirected graphs "
+                             "(the serve landmark path's contract)")
+        self.n = int(cg.n)
+        self.rng = rng
+        self.max_weight = max_weight
+        u = np.asarray(cg.indices, np.int64)
+        v = cg.dst_ids().astype(np.int64)
+        keep = u < v
+        self.live = list(map(tuple, np.stack([u[keep], v[keep]], 1)))
+        self.edge_set = set(self.live)
+
+    def _weight(self) -> float:
+        return float(np.float32(self.rng.uniform(0.5, self.max_weight)))
+
+    def sample(self) -> tuple:
+        """One ``(op, u, v, w)`` edit (w is None for deletes)."""
+        op = ("add", "update", "delete")[int(self.rng.integers(3))]
+        if op == "add" or not self.live:
+            while True:
+                a = int(self.rng.integers(self.n))
+                b = int(self.rng.integers(self.n))
+                key = (min(a, b), max(a, b))
+                if a != b and key not in self.edge_set:
+                    break
+            self.edge_set.add(key)
+            self.live.append(key)
+            return ("add", key[0], key[1], self._weight())
+        j = int(self.rng.integers(len(self.live)))
+        key = self.live[j]
+        if op == "delete":
+            self.live[j] = self.live[-1]
+            self.live.pop()
+            self.edge_set.discard(key)
+            return ("delete", key[0], key[1], None)
+        return ("update", key[0], key[1], self._weight())
+
+
+def make_churn_trace(
+    graphs: Sequence[tuple],        # (name, CsrGraph-like) pairs
+    *,
+    num_events: int,
+    rate: float,
+    mutate_frac: float = 0.15,
+    p2p_frac: float = 0.3,
+    seed: int = 0,
+    zipf_a: float = 1.1,
+    hot_seed: Optional[int] = None,
+    max_weight: float = 100.0,
+) -> list:
+    """Open-loop **churn** trace: a mixed stream of mutations and queries
+    over slowly-changing graphs — the dynamic-serving shape of
+    arXiv:1505.05033's repeat-heavy workloads.
+
+    Each event is a mutation with probability ``mutate_frac``, sampled by
+    a per-graph :class:`EdgeChurn` (deletes/updates pick a live edge,
+    adds an absent pair — updates may raise or lower the weight, so both
+    repair directions occur), else a Zipf-sourced query (a point-to-point
+    pair with probability ``p2p_frac``).  The sampler's evolving edge-set
+    mirror keeps the trace self-consistent: replayed in arrival order
+    against a :class:`~repro.dynamic.DynamicGraph` every edit is valid by
+    construction.  ``graphs`` carries the actual containers (unlike
+    :func:`make_trace`'s (name, n) pairs) because the generator must see
+    the edge sets.  ``hot_seed`` pins the query hot set as in
+    ``make_trace``.
+    """
+    if not 0 <= mutate_frac <= 1:
+        raise ValueError(f"mutate_frac must be in [0, 1], got {mutate_frac}")
+    if rate <= 0:
+        raise ValueError(f"rate must be > 0, got {rate}")
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=num_events))
+    which = rng.integers(0, len(graphs), size=num_events)
+    churn, pools = {}, {}
+    for gi, (name, cg) in enumerate(graphs):
+        churn[gi] = EdgeChurn(cg, rng, max_weight=max_weight)
+        perm = None
+        if hot_seed is not None:
+            perm = np.random.default_rng((hot_seed, gi)).permutation(cg.n)
+        pools[gi] = zipf_vertices(rng, cg.n, 2 * num_events, zipf_a,
+                                  perm=perm)
+    events = []
+    for i in range(num_events):
+        gi = int(which[i])
+        name = graphs[gi][0]
+        t = float(arrivals[i])
+        if rng.random() < mutate_frac:
+            op, u, v, w = churn[gi].sample()
+            events.append(MutationEvent(t, name, op, u, v, w))
+        else:
+            src = int(pools[gi][2 * i])
+            tgt = None
+            if rng.random() < p2p_frac:
+                tgt = int(pools[gi][2 * i + 1])
+            events.append(TraceEvent(t, name, src, tgt))
     return events
 
 

@@ -284,3 +284,42 @@ def test_csr_path_never_materializes_dense(monkeypatch):
     ref = dijkstra_oracle(cg, 0)
     assert np.isfinite(res.dist).all()
     assert finite_close(ref, res.dist)
+
+
+# ---------------------------------------------------------------------------
+# immutability contract: frozen arrays protect the memoized views
+# ---------------------------------------------------------------------------
+
+def test_csr_arrays_and_memoized_views_are_read_only():
+    """CsrGraph's fields and every memoized derived view are frozen: an
+    in-place write anywhere would silently corrupt views other callers
+    already hold (serve handles pin them; dynamic overlays layer on top
+    of them), so numpy must refuse it (the __post_init__ contract)."""
+    cg = C.random_csr_graph(60, 180, seed=9)
+    out_indptr, out_dst, out_w = cg.out_csr()
+    ell_idx, ell_w = cg.ell()
+    oell_idx, oell_w = cg.out_ell()
+    victims = {
+        "indptr": cg.indptr, "indices": cg.indices, "weights": cg.weights,
+        "dst_ids": cg.dst_ids(), "out_indptr": out_indptr,
+        "out_dst": out_dst, "out_w": out_w, "ell_idx": ell_idx,
+        "ell_w": ell_w, "out_ell_idx": oell_idx, "out_ell_w": oell_w,
+        "dense_adj": cg.to_dense().adj,
+    }
+    for name, arr in victims.items():
+        with pytest.raises(ValueError, match="read-only"):
+            arr.flat[0] = 1
+    # memoized identity: repeat calls hand back the SAME frozen arrays
+    assert cg.out_csr()[2] is out_w
+    assert cg.ell()[1] is ell_w
+
+
+def test_csr_freeze_applies_to_caller_supplied_arrays():
+    """Arrays passed into the constructor are frozen too — the container
+    owns them from that point on (copy first to keep a mutable handle)."""
+    indptr = np.array([0, 0, 1], np.int64)
+    indices = np.array([0], np.int32)
+    weights = np.array([2.0], np.float32)
+    C.CsrGraph(indptr=indptr, indices=indices, weights=weights, n=2)
+    with pytest.raises(ValueError, match="read-only"):
+        weights[0] = 5.0
