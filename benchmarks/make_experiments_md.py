@@ -154,6 +154,32 @@ def serve_table(path: str) -> str:
                  f"speedup {gate['zipf_speedup_steady']}x (min "
                  f"{gate['min_ratio']}x), steady cache hit rate "
                  f"{gate['zipf_steady_cache_hit_rate']}"]
+    srecs = doc.get("sharded_results")
+    if srecs:
+        rows += ["",
+                 "Sharded route (serve/dispatch.py, --devices leg): the "
+                 "same Zipf replay through the vertex-partitioned engines "
+                 "vs the single-device serve stack on the same graph.",
+                 "",
+                 "| scenario | n | P | cold q/s | steady q/s "
+                 "| single-device steady q/s | speedup | hit rate "
+                 "| edges/solve | frontier edges/solve |",
+                 "|---|---|---|---|---|---|---|---|---|---|"]
+        for r in srecs:
+            rows.append(
+                f"| {r['scenario']} | {r['n']} | {r['devices']} "
+                f"| {r['sharded_cold_qps']} | {r['sharded_steady_qps']} "
+                f"| {r['single_steady_qps']} "
+                f"| {r['speedup_vs_single_steady']}x "
+                f"| {r['steady_cache_hit_rate']} "
+                f"| {r['sharded_edges_per_solve']} "
+                f"| {r['frontier_edges_per_solve']} |")
+        gs = doc["gate_sharded"]
+        rows += ["", f"**Gate** ({gs['rule']}): "
+                     f"{'PASS' if gs['pass'] else 'FAIL'} — speedup "
+                     f"{gs['speedup_vs_single_steady']}x"
+                     f"{' (enforced)' if gs['ratio_enforced'] else ''}, "
+                     f"edges ratio {gs['edges_ratio']}"]
     return "\n".join(rows)
 
 

@@ -18,16 +18,48 @@ The ``gate`` section asserts, on the largest Zipf point:
 Correctness rides along like run_bench.py: every served answer on the
 verified points is checked bitwise against a fresh ``serial`` solve.
 
+``--devices P`` (default 1) adds the SHARDED serving leg: the same Zipf
+replay on a larger graph routed through the vertex-partitioned engines
+(serve/dispatch.py) on a P-device mesh — forced host devices on CPU, the
+MPI-procs analogue — against the single-device serve stack on the same
+graph.  Its ``gate_sharded`` asserts the union-frontier engine relaxes
+STRICTLY fewer edges per solved source than per-query single-device
+``frontier`` solves (the coalescing win of arXiv:1903.12085, measured),
+and at n >= 20000 additionally that sharded steady-state throughput
+>= 1.0x the single-device route (the crossover DEFAULT_SHARD_THRESHOLD
+encodes); smoke corpora record the ratio without enforcing it, since
+below the crossover the exchange overhead is expected to dominate.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
                                                     [--out PATH]
+                                                    [--devices P]
 
 Spliced into EXPERIMENTS.md by benchmarks/make_experiments_md.py.
 """
 from __future__ import annotations
 
+import os
+import sys
+
+# Device count must be fixed before jax initializes; parse --devices by
+# hand (same pattern as run_bench.py).
+if __name__ == "__main__" and "--help" not in sys.argv and "-h" not in sys.argv:
+    _n = 1
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--devices":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--devices="):
+                _n = int(_a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            break
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", ""))
+
 import argparse
 import json
-import os
 import platform
 import time
 
@@ -38,8 +70,8 @@ import jax
 from benchmarks.common import REPO
 from repro.core import csr as C
 from repro.core.api import shortest_paths
-from repro.serve import (DistanceCache, GraphRegistry, MicroBatchScheduler,
-                         SCENARIOS, make_trace)
+from repro.serve import (DispatchPolicy, DistanceCache, GraphRegistry,
+                         MicroBatchScheduler, SCENARIOS, make_trace)
 
 DEFAULT_OUT = os.path.join(REPO, "BENCH_serve.json")
 
@@ -51,20 +83,42 @@ MAX_BATCH = 16
 CACHE_ROWS = 256
 
 
-def _make_scheduler(cg):
+def _make_scheduler(cg, dispatch=None):
     """Serving stack for one graph with the jit cache pre-warmed (one
-    compile per source-bucket size a drain can hit, plus the target
-    early-exit path with and without a landmark bound) — compiles stay
-    outside the timed windows, as run_bench.py does."""
+    compile per source-bucket size a drain can hit, plus the p2p path)
+    — compiles stay outside the timed windows, as run_bench.py does.
+    Prewarms whichever engine family ``dispatch`` will route this graph
+    to; default is an explicit never-shard policy so the single-device
+    section measures the same stack at any ``--devices``."""
     import jax.numpy as jnp
 
     from repro.core.bellman_csr import sssp_multisource_csr
     from repro.core.frontier import sssp_frontier
 
+    if dispatch is None:
+        dispatch = DispatchPolicy(shard_threshold=None)
     registry = GraphRegistry()
     cache = DistanceCache(capacity=CACHE_ROWS)
-    sched = MicroBatchScheduler(registry, cache, max_batch=MAX_BATCH)
+    sched = MicroBatchScheduler(registry, cache, max_batch=MAX_BATCH,
+                                dispatch=dispatch)
     handle = registry.register("g", cg, landmarks=LANDMARKS)
+    if dispatch.would_shard(cg.n):
+        from repro.core.sharded_csr import (sssp_frontier_sharded,
+                                            sssp_multisource_csr_sharded)
+
+        ch = dispatch.choose(handle, kind="batch")
+        parts = handle.partition(ch.nprocs)
+        pops = handle.partition_ops(ch.nprocs)
+        b = 1
+        while True:
+            sssp_multisource_csr_sharded(
+                parts, jnp.zeros((b,), jnp.int32), ch.mesh, axis=ch.axis,
+                ops=pops)
+            if b >= MAX_BATCH:
+                break
+            b *= 2
+        sssp_frontier_sharded(parts, 0, ch.mesh, axis=ch.axis, ops=pops)
+        return sched
     b = 1
     while True:
         sssp_multisource_csr(handle.csr_ops(),
@@ -126,7 +180,78 @@ def _verify(cg, answers):
                 f"served answer mismatch vs serial: {q} via {a.via}")
 
 
-def run(smoke: bool = False, out: str = DEFAULT_OUT) -> str:
+def _run_sharded(smoke: bool, devices: int):
+    """The --devices P leg: one Zipf cold+steady replay through the
+    sharded route vs the single-device route on the same (larger) graph,
+    plus the per-solve edge-work comparison against fresh per-query
+    ``frontier`` solves.  Returns (record, gate_sharded)."""
+    n = 1000 if smoke else 20000
+    queries = 120 if smoke else 400
+    verify = smoke or n <= 2000
+    cg = C.random_csr_graph(n, 3 * n, seed=n)
+    cold = make_trace("zipf", [("g", n)], num_queries=queries,
+                      rate=RATE, seed=7, hot_seed=13)
+    steady = make_trace("zipf", [("g", n)], num_queries=queries,
+                        rate=RATE, seed=8, hot_seed=13)
+
+    sched1 = _make_scheduler(cg)            # never-shard policy
+    _drain_timed(sched1, cold, cg, verify=False)
+    qps1, _ = _drain_timed(sched1, steady, cg, verify=False)
+
+    shard_pol = DispatchPolicy(shard_threshold=n, nprocs=devices)
+    schedP = _make_scheduler(cg, dispatch=shard_pol)
+    qpsP_cold, _ = _drain_timed(schedP, cold, cg, verify=verify)
+    qpsP, hitP = _drain_timed(schedP, steady, cg, verify=verify)
+    s = schedP.stats()
+    assert s["sharded_sources"] > 0, "sharded route never engaged"
+
+    # edge-work baseline: fresh single-device frontier solves, one per
+    # distinct trace source (what serving each query unbatched costs).
+    srcs = sorted({e.source for e in cold + steady})
+    base = [shortest_paths(cg, src, engine="frontier").edges_relaxed
+            for src in srcs]
+    frontier_per_solve = sum(base) / len(base)
+    sharded_per_solve = s["sharded_edges"] / s["sharded_sources"]
+
+    rec = {
+        "scenario": "zipf-sharded", "n": n, "m": 3 * n,
+        "devices": shard_pol.nprocs, "queries_per_trace": queries,
+        "sharded_cold_qps": round(qpsP_cold, 2),
+        "sharded_steady_qps": round(qpsP, 2),
+        "single_steady_qps": round(qps1, 2),
+        "speedup_vs_single_steady": round(qpsP / qps1, 3),
+        "steady_cache_hit_rate": round(hitP, 4),
+        "sharded_batches": s["sharded_batches"],
+        "sharded_p2p": s["sharded_p2p"],
+        "sharded_sources": s["sharded_sources"],
+        "sharded_edges_per_solve": round(sharded_per_solve, 1),
+        "frontier_edges_per_solve": round(frontier_per_solve, 1),
+        "verified_bitwise": verify,
+    }
+    print(f"  sharded  n={n} P={shard_pol.nprocs}: cold {qpsP_cold:8.1f} / "
+          f"steady {qpsP:8.1f} q/s, single-device steady {qps1:7.1f} q/s "
+          f"({rec['speedup_vs_single_steady']:.2f}x) | edges/solve "
+          f"{sharded_per_solve:.0f} vs frontier {frontier_per_solve:.0f}",
+          flush=True)
+    enforce_ratio = n >= 20000
+    gate = {
+        "rule": ("sharded union-frontier serving relaxes strictly fewer "
+                 "edges per solved source than per-query frontier solves"
+                 + (f", and sharded steady-state Zipf throughput >= 1.0x "
+                    f"the single-device route at n={n}" if enforce_ratio
+                    else f" (throughput ratio recorded, not enforced below "
+                         f"the n=20000 crossover; n={n})")),
+        "speedup_vs_single_steady": rec["speedup_vs_single_steady"],
+        "min_ratio": 1.0,
+        "ratio_enforced": enforce_ratio,
+        "edges_ratio": round(sharded_per_solve / frontier_per_solve, 4),
+        "pass": bool(sharded_per_solve < frontier_per_solve
+                     and (not enforce_ratio or qpsP / qps1 >= 1.0)),
+    }
+    return rec, gate
+
+
+def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1) -> str:
     n = 1000 if smoke else 10000
     queries = 120 if smoke else 400
     verify = smoke or n <= 2000       # serial verify is O(n^2)/row: cap it
@@ -180,19 +305,24 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT) -> str:
                      and zipf["steady_cache_hit_rate"] > 0),
     }
     doc = {
-        "schema": 1,
+        "schema": 2,
         "meta": {
             "created_unix": int(time.time()),
             "jax": jax.__version__,
             "backend": jax.default_backend(),
             "platform": platform.platform(),
             "smoke": smoke,
+            "devices": devices,
             "rate": RATE, "landmarks": LANDMARKS,
             "max_batch": MAX_BATCH, "cache_rows": CACHE_ROWS,
         },
         "results": records,
         "gate": gate,
     }
+    if devices > 1:
+        srec, sgate = _run_sharded(smoke, devices)
+        doc["sharded_results"] = [srec]
+        doc["gate_sharded"] = sgate
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
@@ -200,6 +330,12 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT) -> str:
     print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
     if not gate["pass"]:
         raise SystemExit("serving throughput gate failed")
+    if devices > 1:
+        sgate = doc["gate_sharded"]
+        print(f"gate_sharded[{sgate['rule']}]: "
+              f"{'PASS' if sgate['pass'] else 'FAIL'}")
+        if not sgate["pass"]:
+            raise SystemExit("sharded serving gate failed")
     return out
 
 
@@ -208,5 +344,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized corpus (n=1000, short traces)")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="mesh size for the sharded leg (host devices are "
+                         "forced before jax init; 1 = skip the leg)")
     args = ap.parse_args()
-    run(args.smoke, out=args.out)
+    run(args.smoke, out=args.out, devices=args.devices)

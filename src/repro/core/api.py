@@ -25,6 +25,18 @@ Engines (paper §III):
                        frontier pairs — the MPI-message analogue — and
                        each relaxes O(frontier arcs into its block)
                        (beyond-paper, core/sharded_csr.py; needs a mesh)
+    multisource_csr_sharded
+                       batched (S, n) union-frontier push on the same
+                       partition: the S sources share one compacted
+                       frontier exchange and one arc-window gather per
+                       sweep, so edge loads amortize S ways on top of
+                       the P-way split (beyond-paper; needs a mesh)
+
+    ``engine="auto"`` delegates the choice to the serving layer's
+    dispatch policy (serve/dispatch.py): graphs at or above its
+    shard-threshold route to the sharded CSR engines on a cached
+    host-device mesh, everything else to the single-device frontier /
+    multisource engines.  Same bitwise answers either way.
 
 Choosing dense vs CSR vs frontier (the paper's Table I vs Table II
 trade-off, plus its §V "every edge, every sweep" complaint):
@@ -116,6 +128,7 @@ ENGINES = (
     "multisource_csr",
     "bellman_csr_sharded",
     "frontier_sharded",
+    "multisource_csr_sharded",
 )
 
 # single-source engines that consume CsrGraph operands natively (and return
@@ -124,7 +137,8 @@ CSR_ENGINES = ("bellman_csr", "bellman_csr_kernel",
                "frontier", "frontier_kernel")
 FRONTIER_ENGINES = ("frontier", "frontier_kernel")
 # mesh-requiring engines on vertex-partitioned CSR blocks (core/sharded_csr)
-SHARDED_CSR_ENGINES = ("bellman_csr_sharded", "frontier_sharded")
+SHARDED_CSR_ENGINES = ("bellman_csr_sharded", "frontier_sharded",
+                       "multisource_csr_sharded")
 # every engine that consumes CsrGraph input without densifying it
 _CSR_NATIVE = CSR_ENGINES + ("multisource_csr",) + SHARDED_CSR_ENGINES
 
@@ -181,9 +195,24 @@ def shortest_paths(
     and ``sweeps`` report the actual (reduced) work, which is what
     benchmarks/serve_bench.py measures for the point-to-point scenario.
     """
+    if engine == "auto":
+        # the serving layer's one dispatch seam (serve/dispatch.py) picks
+        # between the single-device and sharded engines; lazy import keeps
+        # core free of a hard serve dependency.
+        from repro.serve.dispatch import default_policy
+
+        multi = np.ndim(source) > 0
+        choice = default_policy().choose(
+            g, kind="batch" if multi else ("p2p" if target is not None
+                                           else "single"))
+        engine, mesh, axis = choice.engine, choice.mesh, choice.axis
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
-    if target is not None and engine not in FRONTIER_ENGINES:
+    # target= early exit is frontier-only; frontier_sharded accepts target=
+    # too but runs the FULL fixpoint (its row is a superset of the partial
+    # solve, dist[target] bitwise-identical — serve caches it as complete).
+    if target is not None and engine not in FRONTIER_ENGINES + (
+            "frontier_sharded",):
         raise ValueError(
             f"target= early exit needs a frontier engine "
             f"{FRONTIER_ENGINES}; got {engine!r}")
@@ -217,11 +246,20 @@ def shortest_paths(
             raise ValueError(f"engine {engine!r} needs a mesh")
         from repro.core._axes import axis_size
         from repro.core.sharded_csr import (sssp_bellman_csr_sharded,
-                                            sssp_frontier_sharded)
+                                            sssp_frontier_sharded,
+                                            sssp_multisource_csr_sharded)
 
         if cg is None:
             cg = g.to_csr()
         parts = cg.partitioned(axis_size(mesh, axis))
+        if engine == "multisource_csr_sharded":
+            srcs = jnp.atleast_1d(jnp.asarray(source, jnp.int32))
+            D, s, e = sssp_multisource_csr_sharded(
+                parts, srcs, mesh, axis=axis, max_sweeps=max_sweeps
+            )
+            return SsspResult(np.asarray(D)[:, :n_true], None, int(s),
+                              engine, edges_relaxed=int(e),
+                              sources=np.asarray(srcs))
         if engine == "bellman_csr_sharded":
             d, p, s = sssp_bellman_csr_sharded(
                 parts, source, mesh, axis=axis, max_sweeps=max_sweeps

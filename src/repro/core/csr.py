@@ -285,6 +285,15 @@ class CsrPartition:
     def per_device_index_bytes(self) -> int:
         return int((self.n_pad + 2) * self.out_indptr.itemsize)
 
+    @property
+    def nbytes(self) -> int:
+        """Total host bytes of the partition view across ALL owners — what
+        serve/registry.py charges against its byte budget when it stages a
+        partition (the staged device arrays mirror these buffers 1:1)."""
+        return int(self.in_src.nbytes + self.in_dst_loc.nbytes
+                   + self.in_w.nbytes + self.out_indptr.nbytes
+                   + self.out_dst_loc.nbytes + self.out_w.nbytes)
+
 
 def _partition_csr(cg: CsrGraph, nprocs: int, pad_multiple: int) -> CsrPartition:
     if nprocs < 1:

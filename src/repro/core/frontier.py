@@ -97,7 +97,8 @@ def frontier_operands(cg, *, with_ell: bool = False,
     return ops
 
 
-def _slot_minloop(nd, starts, off, E, m, F, *, chunk: int, emit):
+def _slot_minloop(nd, starts, off, E, m, F, *, chunk: int, emit,
+                  scatter=None):
     """Chunked slot walker shared by the push and pull relax forms: walk
     ``E`` edge slots ``chunk`` at a time in a ``lax.while_loop`` (trip
     count tracks the actual slot count, the stream-compaction core of
@@ -106,7 +107,13 @@ def _slot_minloop(nd, starts, off, E, m, F, *, chunk: int, emit):
     window starts at or before the slot, landing past zero-degree ties —
     and its in-window position, then scatter-min whatever ``emit(row,
     pos, valid) -> (cand, tgt)`` produces (invalid slots must emit INF
-    aimed at a drop id; scatter mode="drop")."""
+    aimed at a drop id; scatter mode="drop").  ``scatter`` overrides the
+    per-slot scatter-min for callers whose state isn't a flat (n,) row —
+    the multisource form scatter-mins a (S, chunk) candidate block into
+    distance-matrix columns."""
+    if scatter is None:
+        def scatter(nd2, tgt, cand):
+            return nd2.at[tgt].min(cand, mode="drop")
 
     def cond(carry):
         _, c = carry
@@ -121,7 +128,7 @@ def _slot_minloop(nd, starts, off, E, m, F, *, chunk: int, emit):
         pos = starts[row] + (slots - off[row])
         pos = jnp.clip(pos, 0, m - 1)
         cand, tgt = emit(row, pos, valid)
-        return nd2.at[tgt].min(cand, mode="drop"), c + 1
+        return scatter(nd2, tgt, cand), c + 1
 
     nd, _ = lax.while_loop(cond, body, (nd, jnp.int32(0)))
     return nd
@@ -155,6 +162,39 @@ def relax_edge_slots(nd, row_dist, starts, off, E, out_dst, out_w, *,
 
     return _slot_minloop(nd, starts, off, E, m, row_dist.shape[0],
                          chunk=chunk, emit=emit)
+
+
+def relax_edge_slots_multi(ND, row_D, starts, off, E, out_dst, out_w, *,
+                           chunk: int, drop_id):
+    """Multisource PUSH form of :func:`_slot_minloop`: scatter-min
+    ``row_D[:, row] + w`` into ``ND[:, dst]`` for every source at once.
+
+    The multisource coalescing of :func:`relax_edge_slots`: the edge-slot
+    walk — window arithmetic, out_dst/out_w gathers — runs ONCE per slot
+    chunk and is shared by all S sources; only the candidate block is
+    per-source ((S, chunk), one gathered edge weight broadcast across the
+    source axis).  Used by the vertex-partitioned batched engine
+    (core/sharded_csr.sssp_multisource_csr_sharded), where the compacted
+    frontier is the UNION over sources of last sweep's improved vertices.
+
+    ND: (S, n') distance matrix; row_D: (S, F) per-source distances of the
+    compacted frontier rows; remaining args as in :func:`relax_edge_slots`.
+    """
+    m = out_dst.shape[0]
+    if m == 0:                                    # edgeless graph: no work
+        return ND
+
+    def emit(row, pos, valid):
+        cand = jnp.where(valid[None, :], row_D[:, row] + out_w[pos][None, :],
+                         INF)
+        tgt = jnp.where(valid, out_dst[pos], drop_id)
+        return cand, tgt
+
+    def scatter(nd2, tgt, cand):
+        return nd2.at[:, tgt].min(cand, mode="drop")
+
+    return _slot_minloop(ND, starts, off, E, m, row_D.shape[1],
+                         chunk=chunk, emit=emit, scatter=scatter)
 
 
 def pull_edge_slots(nd, fids, src_dist, starts, off, E, in_src, in_w, *,

@@ -56,7 +56,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core._axes import axis_size, axis_tuple
 from repro.core._compat import pvary, shard_map
-from repro.core.frontier import relax_edge_slots
+from repro.core.frontier import relax_edge_slots, relax_edge_slots_multi
 
 INF = jnp.inf
 
@@ -66,7 +66,9 @@ def partition_operands(parts) -> dict:
     sharded engines consume.  Not memoized, same rationale as
     ``csr_operands``: the host numpy blocks are already cached on the
     CsrGraph, so repeat staging is a plain copy, and caching jax buffers
-    on the host container would pin device memory."""
+    on the host container would pin device memory.  Long-lived callers
+    that SHOULD pin (serve/registry.py's graph handles) stage once and
+    pass the dict back through the engines' ``ops=``."""
     return {
         "in_src": jnp.asarray(parts.in_src),
         "in_dst_loc": jnp.asarray(parts.in_dst_loc),
@@ -84,6 +86,7 @@ def sssp_bellman_csr_sharded(
     *,
     axis: str = "data",
     max_sweeps: int | None = None,
+    ops: dict | None = None,
 ):
     """Sharded fixpoint SSSP on a CsrPartition.  Returns
     ``(dist (n_pad,), pred (n_pad,), sweeps)``; valid entries ``[:n]``.
@@ -93,11 +96,14 @@ def sssp_bellman_csr_sharded(
     per-sweep granularity as the dense ``bellman_sharded``, at sparse
     cost.  pred is recovered per owner from its own arcs at the fixpoint
     (same lowest-u tie-break as ``predecessors_from_dist_csr``).
+    ``ops=`` accepts an already-staged :func:`partition_operands` dict
+    (serve/registry.py pins one per handle) instead of re-staging.
     """
     nprocs = axis_size(mesh, axis)
     assert parts.nprocs == nprocs, (parts.nprocs, nprocs)
     cap = int(parts.n_pad if max_sweeps is None else max_sweeps)
-    ops = partition_operands(parts)
+    if ops is None:
+        ops = partition_operands(parts)
     run = _build_bellman(mesh, _axis_key(axis), parts.n_pad, parts.loc_n,
                          cap)
     return run(ops["in_src"], ops["in_dst_loc"], ops["in_w"],
@@ -177,6 +183,7 @@ def sssp_frontier_sharded(
     max_sweeps: int | None = None,
     exchange_chunk: int = 256,
     relax_chunk: int = 1024,
+    ops: dict | None = None,
 ):
     """Sharded frontier-compacted SSSP on a CsrPartition.  Returns
     ``(dist (n_pad,), sweeps, edges_relaxed)``; valid entries ``[:n]``.
@@ -195,12 +202,13 @@ def sssp_frontier_sharded(
     ``edges_relaxed`` is the psum over owners of the arcs windowed by the
     received frontier — equal to the single-device frontier engine's
     counter (each arc has exactly one owner; benchmarks/run_bench.py
-    gates on this).
+    gates on this).  ``ops=`` as in :func:`sssp_bellman_csr_sharded`.
     """
     nprocs = axis_size(mesh, axis)
     assert parts.nprocs == nprocs, (parts.nprocs, nprocs)
     cap = int(parts.n_pad if max_sweeps is None else max_sweeps)
-    ops = partition_operands(parts)
+    if ops is None:
+        ops = partition_operands(parts)
     run = _build_frontier(mesh, _axis_key(axis), parts.n_pad, parts.loc_n,
                           parts.nnz_max, cap,
                           int(min(exchange_chunk, max(parts.loc_n, 1))),
@@ -284,6 +292,144 @@ def _build_frontier(mesh, axis, n_pad, loc_n, nnz_max, cap, CH, RC):
         dist, _, sweeps, edges, _ = lax.while_loop(
             cond, body, (dist0, fmask0, it0, e0, go0))
         return (dist, lax.psum(sweeps, axis) // nprocs,
+                lax.psum(edges, axis))
+
+    return jax.jit(run)
+
+
+def sssp_multisource_csr_sharded(
+    parts,
+    sources,
+    mesh: jax.sharding.Mesh,
+    *,
+    axis: str = "data",
+    max_sweeps: int | None = None,
+    exchange_chunk: int = 256,
+    relax_chunk: int = 1024,
+    ops: dict | None = None,
+):
+    """Batched vertex-partitioned SSSP from S sources on a CsrPartition —
+    the multisource coalescing of :func:`sssp_frontier_sharded`.  Returns
+    ``(D (S, n_pad), sweeps, edges_relaxed)``; valid columns ``[:n]``.
+
+    Per sweep each owner compacts the UNION over sources of its owned
+    improved vertices and the devices exchange ``(global id, per-source
+    dist column)`` pairs — the id chunk is the same payload as the
+    single-source engine, the distance chunk grows to (S, CH).  Each
+    received frontier vertex's out-arc window is then gathered ONCE and
+    relaxed against all S source rows (core/frontier.
+    relax_edge_slots_multi), so the edge-index loads are amortized S ways
+    on top of the P-way partitioning — Kainer & Träff's many-settled-
+    vertices-per-round observation (arXiv:1903.12085) applied across the
+    batch axis.
+
+    ``edges_relaxed`` counts each windowed arc ONCE per sweep however
+    many sources share the gather (psummed over owners) — directly
+    comparable to S single-source ``frontier`` solves, whose counters
+    sum the same windows per source; whenever two batched sources'
+    frontiers overlap in a sweep the union counter is strictly smaller
+    (benchmarks/serve_bench.py's sharded gate measures exactly this).
+
+    Per-source rows are bitwise-equal to S independent solves of any
+    engine: the union frontier is a superset of every per-source
+    frontier, so no per-source improvement is ever missed, and the
+    fixpoint is the same min over the same f32 path sums.  pred is not
+    recovered (same contract as ``multisource_csr``; api.recover_pred
+    rebuilds rows on demand).  ``ops=`` as in the other engines here.
+    """
+    nprocs = axis_size(mesh, axis)
+    assert parts.nprocs == nprocs, (parts.nprocs, nprocs)
+    cap = int(parts.n_pad if max_sweeps is None else max_sweeps)
+    if ops is None:
+        ops = partition_operands(parts)
+    srcs = jnp.atleast_1d(jnp.asarray(sources, jnp.int32))
+    run = _build_multisource_frontier(
+        mesh, _axis_key(axis), parts.n_pad, parts.loc_n, cap,
+        int(min(exchange_chunk, max(parts.loc_n, 1))), int(relax_chunk),
+        int(srcs.shape[0]))
+    return run(ops["out_indptr"], ops["out_dst_loc"], ops["out_w"], srcs)
+
+
+@functools.lru_cache(maxsize=None)
+def _build_multisource_frontier(mesh, axis, n_pad, loc_n, cap, CH, RC, S):
+    """jit-compiled sharded multisource union-frontier engine, memoized
+    per (mesh, statics, S) — serving buckets the source axis to powers of
+    two (serve/scheduler.py), so the cache stays small."""
+    nprocs = axis_size(mesh, axis)
+    fcap = -(-loc_n // CH) * CH                  # frontier buffer, CH-aligned
+
+    @functools.partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
+        out_specs=(P(None, axis), P(), P()),
+    )
+    def run(out_indptr, out_dst_loc, out_w, srcs):
+        out_indptr, out_dst_loc, out_w = (
+            out_indptr[0], out_dst_loc[0], out_w[0])
+        my_p = lax.axis_index(axis)
+        v_base = (my_p * loc_n).astype(jnp.int32)
+        owned = v_base + jnp.arange(loc_n, dtype=jnp.int32)
+        is_src = owned[None, :] == srcs[:, None]          # (S, loc_n)
+        D0 = jnp.where(is_src, 0.0, INF).astype(out_w.dtype)
+        fmask0 = jnp.any(is_src, axis=0)
+
+        def relax(ND, all_ids, all_D, edges):
+            """Push one gathered union-frontier chunk through the local
+            out-CSR: window arithmetic and arc gathers once per slot,
+            candidates per source (relax_edge_slots_multi)."""
+            starts = out_indptr[all_ids]
+            degs = out_indptr[all_ids + 1] - starts
+            csum = jnp.cumsum(degs)
+            E, off = csum[-1], csum - degs
+            ND = relax_edge_slots_multi(
+                ND, all_D, starts, off, E, out_dst_loc, out_w,
+                chunk=RC, drop_id=jnp.int32(loc_n),
+            )
+            return ND, edges + E
+
+        def cond(c):
+            _, _, it, _, go = c
+            return (it < cap) & go
+
+        def body(c):
+            D, fmask, it, edges, _ = c
+            # compact the union frontier; every live pair ships its FULL
+            # per-source distance column — a vertex improved for one
+            # source re-pushes its (already-applied) labels for the
+            # others, inert under min.
+            fidx = jnp.nonzero(fmask, size=fcap, fill_value=loc_n)[0]
+            fidx = fidx.astype(jnp.int32)
+            live = fidx < loc_n
+            gid = jnp.where(live, v_base + fidx, jnp.int32(n_pad))
+            fdm = jnp.where(live[None, :],
+                            D[:, jnp.minimum(fidx, loc_n - 1)], INF)
+            max_cnt = lax.pmax(jnp.sum(fmask), axis)
+
+            def ex_cond(c2):
+                return c2[2] * CH < max_cnt
+
+            def ex_body(c2):
+                ND, e, k = c2
+                ids = lax.dynamic_slice_in_dim(gid, k * CH, CH)
+                ds = lax.dynamic_slice_in_dim(fdm, k * CH, CH, axis=1)
+                all_ids = lax.all_gather(ids, axis, tiled=True)  # (P*CH,)
+                all_D = lax.all_gather(ds, axis, axis=1, tiled=True)
+                ND, e = relax(ND, all_ids, all_D, e)
+                return ND, e, k + 1
+
+            ND, edges, _ = lax.while_loop(
+                ex_cond, ex_body, (D, edges, jnp.int32(0)))
+            improved = jnp.any(ND < D, axis=0)
+            go = lax.psum(jnp.any(improved).astype(jnp.int32), axis) > 0
+            return ND, improved, it + 1, edges, go
+
+        it0 = pvary(jnp.int32(0), axis_tuple(axis))
+        e0 = pvary(jnp.int32(0), axis_tuple(axis))
+        go0 = pvary(jnp.bool_(True), axis_tuple(axis))
+        D, _, sweeps, edges, _ = lax.while_loop(
+            cond, body, (D0, fmask0, it0, e0, go0))
+        return (D, lax.psum(sweeps, axis) // nprocs,
                 lax.psum(edges, axis))
 
     return jax.jit(run)

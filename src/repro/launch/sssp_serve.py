@@ -19,8 +19,35 @@ occupancy, dedup savings, answers-by-path, cache hit rate.
 (graph, source) with the ``serial`` engine and asserts each served answer
 is bitwise-equal — the end-to-end form of the serving exactness
 guarantee (tests/test_serve.py holds the per-component forms).
+
+``--devices P`` emulates a P-device mesh (forced host devices, fixed
+before jax initializes — the MPI-procs analogue) and ``--shard-threshold
+N`` routes graphs with >= N vertices through the vertex-partitioned
+sharded engines (serve/dispatch.py); ``--verify`` covers the sharded
+answers identically, which is how CI's ``--smoke --devices 4`` leg pins
+the sharded route to the bitwise guarantee.
 """
 from __future__ import annotations
+
+import os
+import sys
+
+# Device count must be fixed before jax initializes; parse --devices by
+# hand (same pattern as benchmarks/run_bench.py).
+if __name__ == "__main__" and "--help" not in sys.argv and "-h" not in sys.argv:
+    _n = 1
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--devices":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--devices="):
+                _n = int(_a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            break
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import time
@@ -29,8 +56,10 @@ import numpy as np
 
 from repro.core import csr as C
 from repro.core.api import shortest_paths
-from repro.serve import (DistanceCache, GraphRegistry, LatencyRecorder,
-                         MicroBatchScheduler, SCENARIOS, make_trace)
+from repro.serve import (DispatchPolicy, DistanceCache, GraphRegistry,
+                         LatencyRecorder, MicroBatchScheduler, SCENARIOS,
+                         make_trace, set_default_policy)
+from repro.serve.dispatch import DEFAULT_SHARD_THRESHOLD
 
 
 def replay(sched: MicroBatchScheduler, events) -> list:
@@ -102,6 +131,13 @@ def main(argv=None):
     ap.add_argument("--landmarks", type=int, default=8,
                     help="ALT landmarks per graph (0 disables)")
     ap.add_argument("--cache-rows", type=int, default=256)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="mesh size for the sharded route (host devices "
+                         "are forced before jax init; 1 = never shard)")
+    ap.add_argument("--shard-threshold", type=int,
+                    default=DEFAULT_SHARD_THRESHOLD,
+                    help="route graphs with >= this many vertices through "
+                         "the sharded engines (needs --devices > 1)")
     ap.add_argument("--verify", action=argparse.BooleanOptionalAction,
                     default=None,
                     help="bitwise-check every answer vs serial "
@@ -114,6 +150,12 @@ def main(argv=None):
     rate = args.rate or (2000.0 if args.smoke else 500.0)
     verify = args.verify if args.verify is not None else args.smoke
     scenarios = SCENARIOS if args.scenario == "all" else (args.scenario,)
+    dispatch = DispatchPolicy(shard_threshold=args.shard_threshold,
+                              nprocs=args.devices)
+    set_default_policy(dispatch)    # engine="auto" callers agree with us
+    if dispatch.nprocs > 1:
+        print(f"[sssp_serve] sharded route: {dispatch.nprocs} devices, "
+              f"threshold n>={args.shard_threshold}", flush=True)
 
     graphs = [(f"g{i}", C.random_csr_graph(n, 3 * n, seed=args.seed + i))
               for i in range(args.graphs)]
@@ -124,7 +166,8 @@ def main(argv=None):
         # fresh serving state per scenario so metrics don't bleed across
         registry = GraphRegistry()
         cache = DistanceCache(capacity=args.cache_rows)
-        sched = MicroBatchScheduler(registry, cache, max_batch=args.batch)
+        sched = MicroBatchScheduler(registry, cache, max_batch=args.batch,
+                                    dispatch=dispatch)
         t0 = time.perf_counter()
         for name, cg in graphs:
             registry.register(name, cg, landmarks=args.landmarks,
@@ -146,6 +189,12 @@ def main(argv=None):
               f"dedup saved {s['dedup_saved']}, "
               f"cache hit rate {s['cache']['hit_rate']:.2f} | "
               f"via {s['answered_via']}", flush=True)
+        if s["sharded_batches"] or s["sharded_p2p"]:
+            print(f"[sssp_serve] {scen}: sharded route "
+                  f"{s['sharded_batches']} batches + {s['sharded_p2p']} "
+                  f"p2p ({s['sharded_sources']} sources, "
+                  f"{s['sharded_edges']} edges relaxed) on "
+                  f"{dispatch.nprocs} devices", flush=True)
         # end-of-run accounting: the cache and registry counters the
         # scheduler aggregates but the per-scenario line above elides
         c, r = s["cache"], s["registry"]

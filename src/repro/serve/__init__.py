@@ -5,11 +5,16 @@ The serving layer over the core engine stack (see README.md §Serving):
 staged views; ``MicroBatchScheduler`` coalesces deduplicated sources into
 bucket-padded ``multisource_csr`` solves and point-to-point residues into
 ``target=`` frontier solves; ``DistanceCache`` answers hot sources from
-solved rows; ``landmarks`` precomputes ALT bounds per graph; ``workload``
-generates the synthetic open-loop traces the driver
+solved rows; ``dispatch`` is the engine-selection seam routing
+large-graph solves to the vertex-partitioned sharded engines on a
+cached mesh; ``landmarks`` precomputes ALT bounds per graph;
+``workload`` generates the synthetic open-loop traces the driver
 (repro/launch/sssp_serve.py) replays.
 """
 from repro.serve.cache import DistanceCache
+from repro.serve.dispatch import (DispatchPolicy, EngineChoice,
+                                  default_policy, serving_mesh,
+                                  set_default_policy)
 from repro.serve.landmarks import LandmarkSet, build_landmarks
 from repro.serve.registry import GraphHandle, GraphRegistry
 from repro.serve.scheduler import (Answer, MicroBatchScheduler, Mutation,
@@ -19,7 +24,9 @@ from repro.serve.workload import (LatencyRecorder, MutationEvent, SCENARIOS,
 
 __all__ = [
     "Answer",
+    "DispatchPolicy",
     "DistanceCache",
+    "EngineChoice",
     "GraphHandle",
     "GraphRegistry",
     "LandmarkSet",
@@ -31,6 +38,9 @@ __all__ = [
     "SCENARIOS",
     "TraceEvent",
     "build_landmarks",
+    "default_policy",
     "make_churn_trace",
     "make_trace",
+    "serving_mesh",
+    "set_default_policy",
 ]

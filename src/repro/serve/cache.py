@@ -62,9 +62,37 @@ class DistanceCache:
         and for probing both endpoint rows before committing to one)."""
         return self._rows.get(key)
 
-    def put(self, key: Hashable, row: np.ndarray) -> None:
+    def put(self, key: tuple, row: np.ndarray) -> None:
+        """Insert a COMPLETE fixpoint row under a tuple key.
+
+        Key contract: every key is a tuple whose first element is the
+        graph name — ``(name, source)``, ``(name, version, source)`` for
+        dynamic graphs, ``(name, shard, source)`` for sharded-routed ones
+        (``GraphHandle.row_key`` builds all three).  ``keys_for`` /
+        ``purge_graph`` index ``k[0]`` on every key, so a non-tuple key
+        would crash the next eviction purge (or, for a str key equal to a
+        graph name, be silently over-purged); reject it at insert time
+        where the caller is on the stack.
+
+        The row is FROZEN on insert: served bytes alias the stored array,
+        so a caller that keeps mutating its buffer after ``put`` (e.g. a
+        repair loop patching rows in place) would silently corrupt every
+        later hit — the same aliasing class the overlay staging fixed in
+        dynamic/overlay.py.  Borrowed/externally-owned buffers (views,
+        jax exports) are copied before freezing; owned buffers are frozen
+        in place, making post-insert writes through the caller's handle
+        raise instead of corrupt.
+        """
+        if not isinstance(key, tuple):
+            raise TypeError(
+                f"cache keys must be (graph, ...) tuples (see "
+                f"GraphHandle.row_key); got {type(key).__name__}: {key!r}")
         if self.capacity == 0:
             return
+        row = np.asarray(row)
+        if not row.flags.owndata:
+            row = row.copy()
+        row.setflags(write=False)
         if key in self._rows:
             self._rows.move_to_end(key)
         self._rows[key] = row
@@ -81,7 +109,9 @@ class DistanceCache:
     def keys_for(self, graph: Hashable) -> list:
         """All keys belonging to ``graph``, LRU-first (keys start with
         the graph name whatever their arity — versioned dynamic keys are
-        ``(graph, version, source)``, static ones ``(graph, source)``)."""
+        ``(graph, version, source)``, sharded ``(graph, shard, source)``,
+        static ``(graph, source)``; ``put`` enforces tuple keys so the
+        ``k[0]`` probe here is always the name)."""
         return [k for k in self._rows if k[0] == graph]
 
     def purge_graph(self, graph: Hashable) -> int:

@@ -1,0 +1,144 @@
+"""Engine-selection seam: one place that decides single-device vs
+vertex-partitioned sharded solves.
+
+Both entry points into the engine stack route through here instead of
+hard-coding engine names: ``core.api.shortest_paths(engine="auto")`` for
+one-shot callers, and ``MicroBatchScheduler`` for every served batch /
+point-to-point solve (serve/scheduler.py takes a ``dispatch=`` policy).
+Centralizing the choice keeps the two paths answering identically and
+gives operators a single knob set.
+
+The policy mirrors the paper's own crossover: the MPI arm wins only once
+the per-rank block is big enough to hide the exchange (its Table III
+speedups start at the largest graphs), so small graphs stay on the
+single-device engines and only graphs with ``n >= shard_threshold``
+route to the partitioned ones — and only when the runtime actually has
+multiple devices to partition across.  Dynamic graphs (PR 5 overlays)
+never shard: their serving path relies on overlay-native operands and
+incremental repair, both of which are built on the single-device staged
+views (a frozen CsrPartition would go stale at the first mutation).
+
+The mesh is built once per (nprocs, axis) and cached module-wide —
+serving solves hundreds of queries per second and mesh construction is
+not free.  ``EngineChoice.nprocs`` doubles as the DistanceCache shard
+arity: row keys of sharded-served rows carry the source's owner shard
+(``registry.GraphHandle.row_key(..., shards=nprocs)``), the
+cache-locality layout of "Optimizing Dijkstra for real-world
+performance" (arXiv 1505.05033) — rows live with their owner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import numpy as np
+
+# crossover below which partitioning loses to a single device on the
+# emulated host mesh (benchmarks/serve_bench.py gates the >= side at 4
+# devices); operators override per deployment via DispatchPolicy.
+DEFAULT_SHARD_THRESHOLD = 20000
+
+# query kinds the scheduler distinguishes (scheduler.tick's two solve
+# paths plus api's one-shot single-source case).
+KINDS = ("single", "batch", "p2p")
+
+
+@functools.lru_cache(maxsize=None)
+def serving_mesh(nprocs: int, axis: str = "data") -> jax.sharding.Mesh:
+    """The serving layer's cached 1-D mesh over the first ``nprocs``
+    devices (forced host devices in CI/benchmarks, real ones on metal)."""
+    from repro.core._compat import make_mesh
+
+    return make_mesh((nprocs,), (axis,), devices=jax.devices()[:nprocs])
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineChoice:
+    """One routing decision: which engine, on which mesh (None for the
+    single-device engines), and the shard arity cache keys must carry."""
+    engine: str
+    mesh: Optional[jax.sharding.Mesh]
+    axis: str = "data"
+    nprocs: int = 1
+
+    @property
+    def sharded(self) -> bool:
+        return self.nprocs > 1
+
+
+class DispatchPolicy:
+    """Size-threshold routing between the single-device and sharded CSR
+    engine families.
+
+    shard_threshold: vertex count at which graphs route sharded
+        (inclusive).  ``None`` disables sharding outright.
+    nprocs: devices to partition across; default = every visible device.
+        Clamped to the visible count; 1 also disables sharding.
+    axis: mesh axis name (matches the sharded engines' default).
+    """
+
+    def __init__(self, *, shard_threshold: int | None = DEFAULT_SHARD_THRESHOLD,
+                 nprocs: int | None = None, axis: str = "data"):
+        avail = len(jax.devices())
+        self.nprocs = avail if nprocs is None else min(int(nprocs), avail)
+        self.shard_threshold = shard_threshold
+        self.axis = axis
+
+    # engine per (family, kind); p2p stays on frontier single-device for
+    # the target= early exit — sharded p2p runs the full fixpoint instead
+    # (superset row, same dist[target] bytes) which the scheduler then
+    # caches as a COMPLETE row, unlike the partial target= rows.
+    _SINGLE = {"single": "frontier", "batch": "multisource_csr",
+               "p2p": "frontier"}
+    _SHARDED = {"single": "frontier_sharded",
+                "batch": "multisource_csr_sharded",
+                "p2p": "frontier_sharded"}
+
+    def would_shard(self, n: int, *, dynamic: bool = False) -> bool:
+        """Pure size check — no mesh/staging side effects, so callers
+        (scheduler, registry) can compute deterministic cache-key shapes
+        before anything is staged."""
+        return (not dynamic
+                and self.shard_threshold is not None
+                and self.nprocs > 1
+                and n >= self.shard_threshold)
+
+    def choose(self, g, *, kind: str = "single") -> EngineChoice:
+        """Route one solve.  ``g`` is anything with an ``n`` (CsrGraph,
+        Graph, DynamicGraph, GraphHandle-like) or a dense square array;
+        dynamic graphs are detected and pinned to the single-device
+        family (see module docstring)."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown kind {kind!r}; choose from {KINDS}")
+        from repro.dynamic.overlay import DynamicGraph  # local: serve<->dyn
+
+        dynamic = isinstance(g, DynamicGraph) or getattr(g, "dyn", None) is not None
+        n = getattr(g, "n", None)
+        if n is None:
+            n = int(np.asarray(g).shape[0])
+        if self.would_shard(int(n), dynamic=dynamic):
+            return EngineChoice(self._SHARDED[kind],
+                                serving_mesh(self.nprocs, self.axis),
+                                self.axis, self.nprocs)
+        return EngineChoice(self._SINGLE[kind], None, self.axis, 1)
+
+
+_DEFAULT: Optional[DispatchPolicy] = None
+
+
+def default_policy() -> DispatchPolicy:
+    """Process-wide policy used by ``shortest_paths(engine="auto")`` and
+    by schedulers constructed without an explicit ``dispatch=``."""
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = DispatchPolicy()
+    return _DEFAULT
+
+
+def set_default_policy(policy: Optional[DispatchPolicy]) -> None:
+    """Install (or with ``None`` reset) the process-wide policy — the
+    launcher wires its ``--shard-threshold`` / ``--devices`` flags here."""
+    global _DEFAULT
+    _DEFAULT = policy

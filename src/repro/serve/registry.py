@@ -11,7 +11,11 @@ worth pinning here:
   long-lived *server* object that should, so both the segment-min and the
   frontier operand pytrees are staged lazily and cached on the handle;
 * the **landmark set** (serve/landmarks.py), built at registration with
-  one batched multisource solve.
+  one batched multisource solve;
+* the **vertex-partitioned view** (``CsrGraph.partitioned``) and its
+  staged per-owner device arrays, for graphs the dispatch policy routes
+  to the sharded engines (serve/dispatch.py) — built lazily on first
+  sharded solve and accounted/evicted like every other staged view.
 
 Memory is accounted with the containers' own byte counters (``CsrGraph.
 nbytes``, ``LandmarkSet.nbytes``, device ``.nbytes`` of every staged
@@ -75,6 +79,13 @@ class GraphHandle:
     _csr_ops: Optional[dict] = dataclasses.field(default=None, repr=False)
     _frontier_ops: Optional[dict] = dataclasses.field(default=None,
                                                       repr=False)
+    # vertex-partitioned view + its staged device arrays (sharded serving
+    # path, serve/dispatch.py); keyed by nprocs — a policy change restages.
+    _partition: Optional[csr_mod.CsrPartition] = dataclasses.field(
+        default=None, repr=False)
+    _partition_ops: Optional[dict] = dataclasses.field(default=None,
+                                                       repr=False)
+    _partition_nprocs: int = 0
 
     @property
     def n(self) -> int:
@@ -85,13 +96,30 @@ class GraphHandle:
         """Committed mutation-batch count (0 for static graphs)."""
         return self.dyn.version if self.dyn is not None else 0
 
-    def row_key(self, source: int) -> tuple:
+    def owner_shard(self, source: int, nprocs: int) -> int:
+        """Owner block of ``source`` under the contiguous 1-D vertex
+        partition (``CsrGraph.partitioned``): source // ceil(n/P)."""
+        return int(source) // -(-self.n // int(nprocs))
+
+    def row_key(self, source: int, *, shards: int = 1) -> tuple:
         """Cache key for this graph's ``source`` row at the CURRENT
         version.  Static graphs keep the plain ``(name, source)`` form;
         dynamic graphs interpose the version so every mutation batch
         implicitly retires the old keys (survivors are re-keyed by the
-        scheduler's selective-invalidation hook)."""
+        scheduler's selective-invalidation hook).
+
+        ``shards>1`` (sharded-routed graphs) interposes the source's
+        OWNER SHARD instead — ``(name, shard, source)`` — so cache scans
+        and future tiering can group a graph's rows by the device block
+        that produced them (arXiv 1505.05033's rows-live-with-their-owner
+        locality).  The scheduler derives ``shards`` from the dispatch
+        policy's pure size check, never from staged state, so the key
+        shape is deterministic from the first tick.  Dynamic graphs never
+        shard (serve/dispatch.py), so the two extended forms don't
+        collide."""
         if self.dyn is None:
+            if shards > 1:
+                return (self.name, self.owner_shard(source, shards), source)
             return (self.name, source)
         return (self.name, self.dyn.version, source)
 
@@ -115,6 +143,35 @@ class GraphHandle:
             self._frontier_ops = frontier_operands(
                 self.cg, base_ops=self.csr_ops())
         return self._frontier_ops
+
+    def partition(self, nprocs: int) -> csr_mod.CsrPartition:
+        """The handle's vertex-partitioned view for ``nprocs`` owners,
+        built once and pinned (the sharded serving path's analogue of the
+        staged operand pytrees).  Dynamic graphs refuse: a CsrPartition
+        freezes the arc set, so the overlay's in-place mutations would
+        silently stop reaching sharded answers."""
+        if self.dyn is not None:
+            raise ValueError(
+                f"graph {self.name!r} is dynamic; the sharded engines "
+                "run on a frozen CsrPartition and never serve dynamic "
+                "graphs (serve/dispatch.py pins them single-device)")
+        nprocs = int(nprocs)
+        if self._partition is None or self._partition_nprocs != nprocs:
+            self._partition = self.cg.partitioned(nprocs)
+            self._partition_ops = None
+            self._partition_nprocs = nprocs
+        return self._partition
+
+    def partition_ops(self, nprocs: int) -> dict:
+        """Staged per-owner device arrays over :meth:`partition` —
+        memoized like the other operand pytrees so every sharded solve
+        after the first skips the host->device upload."""
+        parts = self.partition(nprocs)
+        if self._partition_ops is None:
+            from repro.core.sharded_csr import partition_operands
+
+            self._partition_ops = partition_operands(parts)
+        return self._partition_ops
 
     def multisource_sweep_fn(self):
         """``sweep_fn`` the batched engine needs on this handle's operands
@@ -161,8 +218,11 @@ class GraphHandle:
             total = self.cg.nbytes
         if self.landmarks is not None:
             total += self.landmarks.nbytes
+        if self._partition is not None:
+            total += self._partition.nbytes      # host view (all owners)
         seen = {}
-        for ops in (self._csr_ops, self._frontier_ops):
+        for ops in (self._csr_ops, self._frontier_ops,
+                    self._partition_ops):
             if ops:
                 for a in ops.values():
                     seen[id(a)] = int(a.nbytes)

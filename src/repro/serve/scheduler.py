@@ -23,6 +23,22 @@ A tick whose residue is a single point-to-point query takes the
 the solve stops once the target's label is provably final.  Its row is
 partial by construction, so it is never cached.
 
+Engine SELECTION routes through the dispatch seam (serve/dispatch.py):
+graphs at or above the policy's shard threshold — when the runtime has
+devices to shard across — solve on the vertex-partitioned engines
+instead (core/sharded_csr.py) using the handle's staged ``CsrPartition``
+operands on the policy's cached mesh.  Batched residues coalesce across
+devices through the union-frontier ``multisource_csr_sharded`` engine
+(one compacted exchange + one arc gather per sweep shared by all S
+sources); the point-to-point residue runs ``frontier_sharded`` WITHOUT
+early exit — the full fixpoint row is a superset of the partial solve
+with identical ``dist[target]`` bytes, and being complete it IS cached,
+so sharded p2p traffic warms the row cache where single-device p2p
+cannot.  Sharded-served rows are cached under shard-aware keys
+(``row_key(source, shards=P)``, derived from the policy's pure size
+check so key shapes are deterministic from the first tick).  Either
+route returns bitwise-identical bytes.
+
 Every path returns bytes some engine solved (or a bound that *proves* the
 value), so served answers stay bitwise-equal to per-query ``serial``
 solves — the invariant tests/test_serve.py and the --smoke driver verify.
@@ -51,6 +67,7 @@ from repro.core.bellman_csr import sssp_multisource_csr
 from repro.core.frontier import sssp_frontier
 
 from repro.serve.cache import DistanceCache
+from repro.serve.dispatch import DispatchPolicy, default_policy
 from repro.serve.registry import GraphRegistry
 
 VIAS = ("trivial", "cache", "landmark", "batch", "target", "mutate",
@@ -106,6 +123,7 @@ class MicroBatchScheduler:
         max_batch: int = 16,
         p2p_solo: bool = True,
         repair_rows: int = 8,
+        dispatch: Optional[DispatchPolicy] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -114,6 +132,7 @@ class MicroBatchScheduler:
         self.max_batch = max_batch
         self.p2p_solo = p2p_solo
         self.repair_rows = repair_rows
+        self.dispatch = dispatch if dispatch is not None else default_policy()
         registry.add_evict_hook(cache.purge_graph)
         registry.add_mutate_hook(self._on_mutate)
         self._queue: "collections.deque[Query]" = collections.deque()
@@ -122,6 +141,13 @@ class MicroBatchScheduler:
         self.ticks = 0
         self.engine_batches = 0
         self.engine_sources = 0
+        # sharded-route slices of the above plus the engines' measured
+        # relaxation counters (the serve_bench sharded gate divides
+        # sharded_edges by sharded_sources for edges-per-solved-source).
+        self.sharded_batches = 0
+        self.sharded_p2p = 0
+        self.sharded_sources = 0
+        self.sharded_edges = 0
         self.target_solves = 0
         self.dedup_saved = 0
         self.occupancy_sum = 0.0
@@ -237,6 +263,20 @@ class MicroBatchScheduler:
             else:
                 self.rows_invalidated += 1
 
+    # -- dispatch ---------------------------------------------------------
+
+    def _shards(self, handle) -> int:
+        """Shard arity of this graph's cache keys: the policy's PURE size
+        check (no mesh, no staging), so lookups and inserts agree on the
+        key shape from the first tick onward."""
+        if self.dispatch.would_shard(handle.n,
+                                     dynamic=handle.dyn is not None):
+            return self.dispatch.nprocs
+        return 1
+
+    def _row_key(self, handle, source: int) -> tuple:
+        return handle.row_key(source, shards=self._shards(handle))
+
     # -- answer-without-engine paths --------------------------------------
 
     def _try_fast(self, handle, q: Query) -> Optional[Answer]:
@@ -251,7 +291,7 @@ class MicroBatchScheduler:
         """
         if q.target is not None and q.target == q.source:
             return Answer(q, 0.0, "trivial")
-        row = self.cache.get(handle.row_key(q.source))
+        row = self.cache.get(self._row_key(handle, q.source))
         if row is not None:
             val = row if q.target is None else float(row[q.target])
             return Answer(q, val, "cache")
@@ -282,9 +322,31 @@ class MicroBatchScheduler:
         return min(b, self.max_batch)
 
     def _solve_target(self, handle, q: Query) -> Answer:
-        """Point-to-point residue of a tick: one frontier solve that
-        early-exits on the target (plus the landmark bound when one is
-        admissibly available).  The row is partial — never cached."""
+        """Point-to-point residue of a tick.
+
+        Single-device route: one frontier solve that early-exits on the
+        target (plus the landmark bound when one is admissibly
+        available); the row is partial — never cached.  Sharded route:
+        one ``frontier_sharded`` FULL fixpoint — no early exit exists
+        across owners, but the complete row is cacheable, which the
+        partial row never is (``dist[target]`` bytes identical either
+        way)."""
+        choice = self.dispatch.choose(handle, kind="p2p")
+        if choice.sharded:
+            from repro.core.sharded_csr import sssp_frontier_sharded
+
+            parts = handle.partition(choice.nprocs)
+            pops = handle.partition_ops(choice.nprocs)
+            self.registry.touch_staged(handle.name)
+            d, _, e = sssp_frontier_sharded(
+                parts, q.source, choice.mesh, axis=choice.axis, ops=pops)
+            row = np.asarray(d)[:handle.n]
+            self.cache.put(self._row_key(handle, q.source), row)
+            self.target_solves += 1
+            self.sharded_p2p += 1
+            self.sharded_sources += 1
+            self.sharded_edges += int(e)
+            return Answer(q, float(row[q.target]), "target")
         ops = handle.frontier_ops()
         self.registry.touch_staged(handle.name)
         lb = None
@@ -304,16 +366,33 @@ class MicroBatchScheduler:
         """One bucket-padded multisource solve answering ``queries``
         (all on ``handle``'s graph, <= max_batch distinct sources)."""
         distinct: list[int] = []
+        seen: set[int] = set()
         for q in queries:
-            if q.source not in distinct:
+            if q.source not in seen:
+                seen.add(q.source)
                 distinct.append(q.source)
         bucket = self._bucket(len(distinct))
         padded = distinct + [distinct[0]] * (bucket - len(distinct))
-        D, _ = sssp_multisource_csr(
-            handle.csr_ops(), jnp.asarray(padded, jnp.int32), n=handle.n,
-            sweep_fn=handle.multisource_sweep_fn())
-        self.registry.touch_staged(handle.name)
-        rows = np.asarray(D)
+        choice = self.dispatch.choose(handle, kind="batch")
+        if choice.sharded:
+            from repro.core.sharded_csr import sssp_multisource_csr_sharded
+
+            parts = handle.partition(choice.nprocs)
+            pops = handle.partition_ops(choice.nprocs)
+            self.registry.touch_staged(handle.name)
+            D, _, e = sssp_multisource_csr_sharded(
+                parts, jnp.asarray(padded, jnp.int32), choice.mesh,
+                axis=choice.axis, ops=pops)
+            rows = np.asarray(D)[:, :handle.n]
+            self.sharded_batches += 1
+            self.sharded_sources += len(distinct)
+            self.sharded_edges += int(e)
+        else:
+            D, _ = sssp_multisource_csr(
+                handle.csr_ops(), jnp.asarray(padded, jnp.int32),
+                n=handle.n, sweep_fn=handle.multisource_sweep_fn())
+            self.registry.touch_staged(handle.name)
+            rows = np.asarray(D)
         self.engine_batches += 1
         self.engine_sources += len(distinct)
         self.dedup_saved += len(queries) - len(distinct)
@@ -322,7 +401,7 @@ class MicroBatchScheduler:
         out = []
         for q in queries:
             row = by_source[q.source]
-            self.cache.put(handle.row_key(q.source), row)
+            self.cache.put(self._row_key(handle, q.source), row)
             val = row if q.target is None else float(row[q.target])
             out.append(Answer(q, val, "batch"))
         return out
@@ -369,14 +448,18 @@ class MicroBatchScheduler:
             if not need_engine:
                 continue
             # cap distinct sources at max_batch; queries on uncovered
-            # sources wait for the next tick.
+            # sources wait for the next tick.  Admission is O(1) per
+            # query via the set; the list keeps admission order (and is
+            # what _solve_batch's dedup re-derives per-query order from).
             allowed: list[int] = []
+            allowed_set: set[int] = set()
             take, defer = [], []
             for q in need_engine:
-                if q.source in allowed:
+                if q.source in allowed_set:
                     take.append(q)
                 elif len(allowed) < self.max_batch:
                     allowed.append(q.source)
+                    allowed_set.add(q.source)
                     take.append(q)
                 else:
                     defer.append(q)
@@ -412,6 +495,10 @@ class MicroBatchScheduler:
             "ticks": self.ticks,
             "engine_batches": self.engine_batches,
             "engine_sources": self.engine_sources,
+            "sharded_batches": self.sharded_batches,
+            "sharded_p2p": self.sharded_p2p,
+            "sharded_sources": self.sharded_sources,
+            "sharded_edges": self.sharded_edges,
             "target_solves": self.target_solves,
             "dedup_saved": self.dedup_saved,
             "mean_occupancy": round(self.mean_occupancy, 4),

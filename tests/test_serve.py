@@ -173,6 +173,39 @@ def test_cache_purge_graph_is_selective():
     assert cache.peek(("b", 0)) is not None and len(cache) == 1
 
 
+def test_cache_put_freezes_rows_against_caller_mutation():
+    cache = DistanceCache(capacity=4)
+    # borrowed buffer (a view): copied before freezing, so the caller's
+    # backing store stays writable and post-put edits never reach the
+    # cached bytes
+    backing = np.arange(6, dtype=np.float32)
+    view = backing[:4]
+    assert not view.flags.owndata
+    cache.put(("g", 0), view)
+    backing[:] = -1.0                    # the regression: mutate after put
+    assert np.array_equal(cache.get(("g", 0)),
+                          np.arange(4, dtype=np.float32))
+    # owned buffer: frozen in place — the repair-in-place aliasing class
+    # becomes an immediate error instead of corrupted served bytes
+    row = np.ones(4, dtype=np.float32)
+    cache.put(("g", 1), row)
+    with pytest.raises(ValueError):
+        row[0] = 99.0
+    assert np.array_equal(cache.get(("g", 1)), np.ones(4))
+
+
+def test_cache_rejects_non_tuple_keys():
+    # keys_for/purge_graph index k[0] on every key: a str key would make
+    # purge_graph("g") crash or over-purge, so put refuses it outright
+    cache = DistanceCache(capacity=4)
+    with pytest.raises(TypeError, match="tuple"):
+        cache.put("g", np.zeros(2))
+    cache.put(("g", 0), np.zeros(2))
+    cache.put(("g", 1, 0), np.ones(2))   # versioned/sharded arities coexist
+    assert sorted(cache.keys_for("g")) == [("g", 0), ("g", 1, 0)]
+    assert cache.purge_graph("g") == 2 and len(cache) == 0
+
+
 # ---------------------------------------------------------------------------
 # scheduler: dedup, bucketing, exactness per path
 # ---------------------------------------------------------------------------
@@ -214,6 +247,55 @@ def test_scheduler_overflow_requeues_beyond_max_batch():
     assert len(rest) == 6
     rows = _serial_rows(cg, range(10))
     _assert_exact(first + rest, {"g": rows})
+
+
+def test_scheduler_admission_split_and_requeue_order():
+    """The set-based source admission (O(B) per tick instead of O(B^2))
+    must keep the take/defer split and requeue order byte-identical:
+    repeats of admitted sources ride along, overflow sources defer in
+    FIFO order ahead of newer arrivals."""
+    cg = C.random_csr_graph(60, 180, seed=6)
+    _, _, sched = _stack(cg, max_batch=2)
+    qs = [sched.submit("g", s) for s in (7, 8, 9, 7, 10)]
+    first = sched.tick()
+    # sources 7, 8 admitted; the repeat 7 rides along; 9, 10 deferred
+    assert [a.query.qid for a in first] == [qs[0].qid, qs[1].qid, qs[3].qid]
+    assert sched.engine_batches == 1 and sched.engine_sources == 2
+    assert [q.qid for q in sched._queue] == [qs[2].qid, qs[4].qid]
+    later = sched.submit("g", 11)        # newer arrival waits its turn
+    second = sched.tick()
+    assert [a.query.qid for a in second] == [qs[2].qid, qs[4].qid]
+    third = sched.tick()
+    assert [a.query.qid for a in third] == [later.qid]
+    rows = _serial_rows(cg, [7, 8, 9, 10, 11])
+    _assert_exact(first + second + third, {"g": rows})
+
+
+def test_scheduler_multigraph_overflow_fair_requeue():
+    """Two graphs overflowing max_batch in ONE tick: both graphs'
+    deferred queries are requeued ahead of newer arrivals, each graph's
+    in original FIFO order (the tick() contract across graphs)."""
+    ga, gb = (C.random_csr_graph(50, 150, seed=i) for i in (7, 8))
+    registry, cache, sched = _stack(ga, max_batch=2, name="a")
+    registry.register("b", gb)
+    for s in range(4):                   # a0 b0 a1 b1 ... interleaved
+        sched.submit("a", s)
+        sched.submit("b", s)
+    first = sched.tick()
+    assert len(first) == 4               # 2 sources admitted per graph
+    assert [(q.graph, q.source) for q in sched._queue] == [
+        ("a", 2), ("a", 3), ("b", 2), ("b", 3)]
+    newer = sched.submit("a", 4)         # arrives after the overflow
+    second = sched.tick()
+    # both graphs' deferred queries are served before the newer arrival
+    assert {(a.query.graph, a.query.source) for a in second} == {
+        ("a", 2), ("a", 3), ("b", 2), ("b", 3)}
+    assert [q.qid for q in sched._queue] == [newer.qid]
+    third = sched.tick()
+    assert [a.query.qid for a in third] == [newer.qid]
+    rows = {"a": _serial_rows(ga, [0, 1, 2, 3, 4]),
+            "b": _serial_rows(gb, range(4))}
+    _assert_exact(first + second + third, rows)
 
 
 def test_scheduler_cache_hits_skip_engine():
