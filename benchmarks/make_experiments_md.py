@@ -180,6 +180,36 @@ def serve_table(path: str) -> str:
                      f"{gs['speedup_vs_single_steady']}x"
                      f"{' (enforced)' if gs['ratio_enforced'] else ''}, "
                      f"edges ratio {gs['edges_ratio']}"]
+    orecs = doc.get("overload_results")
+    if orecs:
+        rows += ["",
+                 "Degraded mode (README.md §Robustness, --overload leg): "
+                 "the same p2p workload offered OPEN-LOOP at 2x the "
+                 "measured sustainable rate, unprotected scheduler vs "
+                 "protected (bounded queue + per-query deadlines + "
+                 "landmark degradation).",
+                 "",
+                 "| n | deadline | sustainable q/s | offered q/s "
+                 "| unprotected p99 | protected p99 (served) | served ok "
+                 "| degraded | rejected/shed/expired |",
+                 "|---|---|---|---|---|---|---|---|---|"]
+        for r in orecs:
+            shed = (r["rejected_at_submit"] + r["shed"]
+                    + r["deadline_expired"])
+            rows.append(
+                f"| {r['n']} | {r['deadline_s']}s "
+                f"| {r['sustainable_qps']} | {r['offered_qps']} "
+                f"| {round(r['unprotected_p99_s'] * 1e3, 1)} ms "
+                f"| {round(r['protected_p99_served_s'] * 1e3, 1)} ms "
+                f"| {r['served_ok']} | {r['served_degraded']} "
+                f"| {shed} |")
+        og = doc["gate_overload"]
+        rows += ["", f"**Gate** ({og['rule']}): "
+                     f"{'PASS' if og['pass'] else 'FAIL'} — protected "
+                     f"p99 {round(og['protected_p99_served_s'] * 1e3, 1)} "
+                     f"ms (bound {round(og['p99_bound_s'] * 1e3, 1)} ms), "
+                     f"{og['shed_total']} shed + {og['degraded']} "
+                     f"degraded"]
     return "\n".join(rows)
 
 

@@ -30,9 +30,23 @@ and at n >= 20000 additionally that sharded steady-state throughput
 encodes); smoke corpora record the ratio without enforcing it, since
 below the crossover the exchange overhead is expected to dominate.
 
+``--overload`` adds the DEGRADED-MODE leg (README.md §Robustness): the
+sustainable p2p service rate is measured closed-loop, then the same
+workload is offered OPEN-LOOP at 2x that rate against (a) an
+unprotected scheduler — unbounded queue, no deadlines, queueing delay
+compounds without limit — and (b) a protected one (bounded queue +
+per-query deadlines + landmark/stale degradation).  Its
+``gate_overload`` asserts the protected scheduler SHEDS OR DEGRADES
+rather than collapses: every accepted query is answered, the overload
+protection actually engages (load rejected/shed/expired, or answered
+degraded from landmark bounds), and the p99 latency of served (ok)
+answers stays <= 2x the deadline — while the unprotected p99 is
+recorded for contrast.
+
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
                                                     [--out PATH]
                                                     [--devices P]
+                                                    [--overload]
 
 Spliced into EXPERIMENTS.md by benchmarks/make_experiments_md.py.
 """
@@ -59,6 +73,7 @@ if __name__ == "__main__" and "--help" not in sys.argv and "-h" not in sys.argv:
             + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
+import dataclasses
 import json
 import platform
 import time
@@ -71,7 +86,8 @@ from benchmarks.common import REPO
 from repro.core import csr as C
 from repro.core.api import shortest_paths
 from repro.serve import (DispatchPolicy, DistanceCache, GraphRegistry,
-                         MicroBatchScheduler, SCENARIOS, make_trace)
+                         MicroBatchScheduler, QueryRejected, SCENARIOS,
+                         make_trace)
 
 DEFAULT_OUT = os.path.join(REPO, "BENCH_serve.json")
 
@@ -83,13 +99,14 @@ MAX_BATCH = 16
 CACHE_ROWS = 256
 
 
-def _make_scheduler(cg, dispatch=None):
+def _make_scheduler(cg, dispatch=None, **sched_kwargs):
     """Serving stack for one graph with the jit cache pre-warmed (one
     compile per source-bucket size a drain can hit, plus the p2p path)
     — compiles stay outside the timed windows, as run_bench.py does.
     Prewarms whichever engine family ``dispatch`` will route this graph
     to; default is an explicit never-shard policy so the single-device
-    section measures the same stack at any ``--devices``."""
+    section measures the same stack at any ``--devices``.  Extra kwargs
+    reach the scheduler (the overload leg's max_queue/degrade knobs)."""
     import jax.numpy as jnp
 
     from repro.core.bellman_csr import sssp_multisource_csr
@@ -100,7 +117,7 @@ def _make_scheduler(cg, dispatch=None):
     registry = GraphRegistry()
     cache = DistanceCache(capacity=CACHE_ROWS)
     sched = MicroBatchScheduler(registry, cache, max_batch=MAX_BATCH,
-                                dispatch=dispatch)
+                                dispatch=dispatch, **sched_kwargs)
     handle = registry.register("g", cg, landmarks=LANDMARKS)
     if dispatch.would_shard(cg.n):
         from repro.core.sharded_csr import (sssp_frontier_sharded,
@@ -251,7 +268,140 @@ def _run_sharded(smoke: bool, devices: int):
     return rec, gate
 
 
-def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1) -> str:
+def _replay_open_loop(sched, events):
+    """Wall-clock open-loop replay with deadlines: submits when arrivals
+    pass (dropping backpressure-rejected ones), ticks with the live
+    clock so expiry/degradation engage.  Returns (answers, rejected)."""
+    events = sorted(events, key=lambda e: e.arrival)
+    t0 = time.perf_counter()
+    i, answers, rejected = 0, [], 0
+    while i < len(events) or sched.pending:
+        now = time.perf_counter() - t0
+        while i < len(events) and events[i].arrival <= now:
+            e = events[i]
+            try:
+                sched.submit("g", e.source, e.target, arrival=e.arrival,
+                             deadline=e.deadline)
+            except QueryRejected:
+                rejected += 1
+            i += 1
+        if sched.pending:
+            out = sched.tick(now)
+            done = time.perf_counter() - t0
+            for a in out:
+                a.done_at = done
+            answers.extend(out)
+        elif i < len(events):
+            time.sleep(min(events[i].arrival - now, 1e-3))
+    return answers, rejected
+
+
+def _p99(latencies) -> float:
+    lat = np.asarray(sorted(latencies), np.float64)
+    return float(np.percentile(lat, 99)) if lat.size else 0.0
+
+
+def _run_overload(smoke: bool):
+    """The --overload leg (see module docstring): 2x-sustainable offered
+    load against the unprotected vs the protected scheduler.  Returns
+    (record, gate_overload)."""
+    n = 1000 if smoke else 10000
+    span = 0.5 if smoke else 1.0          # seconds of offered arrivals
+    cg = C.random_csr_graph(n, 3 * n, seed=n)
+
+    # Both schedulers under test are warmed IN PLACE (distance cache +
+    # staged operands, on top of _make_scheduler's jit prewarm) before
+    # the overload arrives: the leg measures a steady-state server hit
+    # with 2x load, not a cold start whose first tick alone outlives
+    # every deadline.
+    warm = make_trace("p2p", [("g", n)], num_queries=160, rate=RATE,
+                      seed=7, hot_seed=13)
+    steady = make_trace("p2p", [("g", n)], num_queries=160, rate=RATE,
+                        seed=8, hot_seed=13)
+    schedU = _make_scheduler(cg)
+    _drain_timed(schedU, warm, cg, verify=False)
+    # sustainable service rate: closed-loop steady drain, warm cache
+    capacity, _ = _drain_timed(schedU, steady, cg, verify=False)
+    # service-time-aware deadline: a full batch costs ~MAX_BATCH/capacity
+    # seconds of solve time on THIS host at THIS graph size, so each query
+    # gets a few batch-times of budget.  A fixed wall-clock deadline is
+    # either unservable (one n=10000 tick outlives it — served p99 can
+    # never meet the gate no matter how well the scheduler sheds) or
+    # trivially loose at smoke size.
+    deadline = float(min(max(6.0 * MAX_BATCH / capacity, 0.1), 1.0))
+    # protected: bounded queue + deadlines + degraded fallbacks.
+    # margin = deadline/2: a query that has burned half its budget in the
+    # queue is answered from landmark bounds instead of gambling on an
+    # exact solve it may not get — the knob that makes degraded answers
+    # actually appear under 2x load rather than only expiries.
+    schedP = _make_scheduler(cg, max_queue=16 * MAX_BATCH,
+                             degrade_margin=deadline / 2)
+    _drain_timed(schedP, warm, cg, verify=False)
+    _drain_timed(schedP, steady, cg, verify=False)
+    offered = 2.0 * capacity
+    # enough arrivals to span many ticks at the offered rate — an
+    # open-loop trace shorter than one tick is just a burst, not load.
+    queries = int(min(max(offered * span, 240), 4000))
+    trace = make_trace("p2p", [("g", n)], num_queries=queries,
+                       rate=offered, seed=9, hot_seed=13,
+                       deadline=deadline)
+
+    # unprotected: unbounded queue, no deadlines — queueing compounds
+    ansU, _ = _replay_open_loop(
+        schedU, [dataclasses.replace(e, deadline=None) for e in trace])
+    p99_unprotected = _p99(a.done_at - a.query.arrival for a in ansU)
+
+    ansP, rejected = _replay_open_loop(schedP, trace)
+    served = [a for a in ansP if a.status == "ok"]
+    _verify(cg, [a for a in served if a.exact])
+    p99_served = _p99(a.done_at - a.query.arrival for a in served)
+    sP = schedP.stats()
+    shed_total = rejected + sP["shed"] + sP["deadline_expired"]
+    accepted = queries - rejected
+
+    rec = {
+        "scenario": "p2p-overload", "n": n, "m": 3 * n,
+        "queries": queries, "deadline_s": round(deadline, 3),
+        "sustainable_qps": round(capacity, 2),
+        "offered_qps": round(offered, 2),
+        "unprotected_p99_s": round(p99_unprotected, 4),
+        "protected_p99_served_s": round(p99_served, 4),
+        "accepted": accepted,
+        "answered": len(ansP),
+        "served_ok": len(served),
+        "served_degraded": sP["degraded_p2p"] + sP["degraded_batch"],
+        "rejected_at_submit": rejected,
+        "shed": sP["shed"],
+        "deadline_expired": sP["deadline_expired"],
+        "statuses": sP["answered_status"],
+    }
+    degraded = rec["served_degraded"]
+    print(f"  overload n={n}: offered {offered:7.1f} q/s (2x sustainable "
+          f"{capacity:.1f}) | protected p99 {p99_served * 1e3:.1f} ms "
+          f"({len(served)} served, {degraded} degraded, "
+          f"{shed_total} shed/rejected/expired) vs unprotected p99 "
+          f"{p99_unprotected * 1e3:.1f} ms", flush=True)
+    gate = {
+        "rule": (f"at 2x sustainable offered load the protected scheduler "
+                 f"sheds or degrades instead of collapsing: every accepted "
+                 f"query is answered, overload protection actually engages "
+                 f"(rejected/shed/expired or degraded answers > 0), and "
+                 f"served-answer p99 stays <= 2x the {deadline:.3f}s "
+                 f"service-time-scaled deadline "
+                 f"(unprotected p99 recorded for contrast)"),
+        "protected_p99_served_s": rec["protected_p99_served_s"],
+        "p99_bound_s": 2 * deadline,
+        "shed_total": shed_total,
+        "degraded": degraded,
+        "all_accepted_answered": bool(len(ansP) == accepted),
+        "pass": bool(len(ansP) == accepted and shed_total + degraded > 0
+                     and p99_served <= 2 * deadline),
+    }
+    return rec, gate
+
+
+def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1,
+        overload: bool = False) -> str:
     n = 1000 if smoke else 10000
     queries = 120 if smoke else 400
     verify = smoke or n <= 2000       # serial verify is O(n^2)/row: cap it
@@ -323,6 +473,10 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1) -> str:
         srec, sgate = _run_sharded(smoke, devices)
         doc["sharded_results"] = [srec]
         doc["gate_sharded"] = sgate
+    if overload:
+        orec, ogate = _run_overload(smoke)
+        doc["overload_results"] = [orec]
+        doc["gate_overload"] = ogate
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
@@ -336,6 +490,12 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1) -> str:
               f"{'PASS' if sgate['pass'] else 'FAIL'}")
         if not sgate["pass"]:
             raise SystemExit("sharded serving gate failed")
+    if overload:
+        ogate = doc["gate_overload"]
+        print(f"gate_overload[{ogate['rule']}]: "
+              f"{'PASS' if ogate['pass'] else 'FAIL'}")
+        if not ogate["pass"]:
+            raise SystemExit("overload degraded-mode gate failed")
     return out
 
 
@@ -347,5 +507,9 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=1,
                     help="mesh size for the sharded leg (host devices are "
                          "forced before jax init; 1 = skip the leg)")
+    ap.add_argument("--overload", action="store_true",
+                    help="add the 2x-offered-load degraded-mode leg and "
+                         "its shed-don't-collapse gate")
     args = ap.parse_args()
-    run(args.smoke, out=args.out, devices=args.devices)
+    run(args.smoke, out=args.out, devices=args.devices,
+        overload=args.overload)

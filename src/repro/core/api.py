@@ -155,6 +155,13 @@ class SsspResult:
     edges_relaxed: Optional[int] = None
     # sources as submitted (multisource engines), for recover_pred.
     sources: Optional[np.ndarray] = None
+    # solver guardrail, fixpoint families (bellman_csr*, frontier*,
+    # multisource_csr, the sharded CSR trio, and the dynamic solves):
+    # False means a max_sweeps= cap stopped the loop before the fixpoint
+    # and dist may sit above the true distances — callers must not treat
+    # such a result as exact (serve/errors.NotConverged is the serving
+    # consumer).  None for engines without the flag (serial, dense).
+    converged: Optional[bool] = None
 
 
 def shortest_paths(
@@ -254,21 +261,22 @@ def shortest_paths(
         parts = cg.partitioned(axis_size(mesh, axis))
         if engine == "multisource_csr_sharded":
             srcs = jnp.atleast_1d(jnp.asarray(source, jnp.int32))
-            D, s, e = sssp_multisource_csr_sharded(
+            D, s, e, c = sssp_multisource_csr_sharded(
                 parts, srcs, mesh, axis=axis, max_sweeps=max_sweeps
             )
             return SsspResult(np.asarray(D)[:, :n_true], None, int(s),
                               engine, edges_relaxed=int(e),
-                              sources=np.asarray(srcs))
+                              sources=np.asarray(srcs), converged=bool(c))
         if engine == "bellman_csr_sharded":
-            d, p, s = sssp_bellman_csr_sharded(
+            d, p, s, c = sssp_bellman_csr_sharded(
                 parts, source, mesh, axis=axis, max_sweeps=max_sweeps
             )
             # actual partitioned work: every owner sweeps its padded block.
             edges = int(s) * parts.nprocs * parts.nnz_max
             return SsspResult(np.asarray(d)[:n_true], np.asarray(p)[:n_true],
-                              int(s), engine, edges_relaxed=edges)
-        d, s, e = sssp_frontier_sharded(
+                              int(s), engine, edges_relaxed=edges,
+                              converged=bool(c))
+        d, s, e, c = sssp_frontier_sharded(
             parts, source, mesh, axis=axis, max_sweeps=max_sweeps
         )
         dist = jnp.asarray(d)[:n_true]
@@ -277,7 +285,7 @@ def shortest_paths(
         pred = predecessors_from_dist_csr(dist, csr_operands(cg),
                                           jnp.int32(source))
         return SsspResult(np.asarray(dist), np.asarray(pred), int(s), engine,
-                          edges_relaxed=int(e))
+                          edges_relaxed=int(e), converged=bool(c))
 
     if engine in FRONTIER_ENGINES:
         if cg is None:
@@ -289,7 +297,7 @@ def shortest_paths(
             from repro.kernels.frontier_relax.ops import make_frontier_sweep_fn
 
             sweep_fn = make_frontier_sweep_fn(block_f=block)
-        d, p, s, e = sssp_frontier(
+        d, p, s, e, c = sssp_frontier(
             operands,
             jnp.int32(source),
             n=cg.n,
@@ -304,18 +312,18 @@ def shortest_paths(
         # recovery is the point of the early exit.
         return SsspResult(np.asarray(d),
                           None if p is None else np.asarray(p), int(s),
-                          engine, edges_relaxed=int(e))
+                          engine, edges_relaxed=int(e), converged=bool(c))
 
     if engine == "multisource_csr":
         if cg is None:
             cg = g.to_csr()
         srcs = jnp.atleast_1d(jnp.asarray(source, jnp.int32))
-        D, s = sssp_multisource_csr(
+        D, s, c = sssp_multisource_csr(
             csr_operands(cg), srcs, n=cg.n, max_sweeps=max_sweeps
         )
         return SsspResult(np.asarray(D), None, int(s), engine,
                           edges_relaxed=int(s) * cg.nnz * srcs.shape[0],
-                          sources=np.asarray(srcs))
+                          sources=np.asarray(srcs), converged=bool(c))
 
     if engine in CSR_ENGINES:
         if cg is None:
@@ -327,7 +335,7 @@ def shortest_paths(
             from repro.kernels.csr_relax.ops import make_csr_sweep_fn
 
             sweep_fn = make_csr_sweep_fn(block_v=block)
-        d, p, s = sssp_bellman_csr(
+        d, p, s, c = sssp_bellman_csr(
             operands,
             jnp.int32(source),
             n=cg.n,
@@ -335,7 +343,7 @@ def shortest_paths(
             max_sweeps=max_sweeps,
         )
         return SsspResult(np.asarray(d), np.asarray(p), int(s), engine,
-                          edges_relaxed=int(s) * cg.nnz)
+                          edges_relaxed=int(s) * cg.nnz, converged=bool(c))
 
     if engine == "serial":
         d, p = dijkstra_serial(jnp.asarray(g.adj), jnp.int32(source))

@@ -87,13 +87,23 @@ def sssp_bellman_csr(
     sweep_fn: Optional[Callable] = None,
     max_sweeps: int | None = None,
 ):
-    """Fixpoint SSSP on CSR operands.  Returns (dist, pred, num_sweeps).
+    """Fixpoint SSSP on CSR operands.  Returns
+    ``(dist, pred, num_sweeps, converged)``.
 
     csr: the pytree from :func:`csr_operands`.  ``sweep_fn(dist, csr) ->
     new_dist`` (self-distance folded in, like bellman.py's sweep_fn) lets
     callers swap in the Pallas ELL kernel
     (kernels/csr_relax/ops.make_csr_sweep_fn) for the segment-min path;
     both satisfy the same oracle (kernels/csr_relax/ref.py).
+
+    ``converged`` is the solver guardrail (serve/errors.py's
+    ``NotConverged`` consumes it): True iff the loop exited because the
+    last sweep changed nothing — under a tight ``max_sweeps=`` cap the
+    flag goes False instead of silently returning labels above their
+    fixpoint.  The hop-diameter default cap (n) always converges on
+    nonnegative weights, so the flag is only ever False when a caller
+    caps the loop (or, later, when Johnson's reweighting meets a
+    negative cycle).
 
     Every sweep relaxes all m stored arcs; for frontier-restricted O(active
     out-degree) sweeps use core.frontier.sssp_frontier instead (the old
@@ -114,11 +124,12 @@ def sssp_bellman_csr(
 
     # prev sentinel differs from dist0 so the loop runs at least once.
     prev0 = jnp.full_like(dist0, -1.0)
-    dist, _, sweeps = lax.while_loop(
+    dist, prev, sweeps = lax.while_loop(
         cond, body, (dist0, prev0, jnp.int32(0))
     )
+    converged = ~jnp.any(dist != prev)
     pred = predecessors_from_dist_csr(dist, csr, source)
-    return dist, pred, sweeps
+    return dist, pred, sweeps, converged
 
 
 def segment_relax_sweep_multi(D: jax.Array, csr: dict) -> jax.Array:
@@ -141,10 +152,12 @@ def sssp_multisource_csr(
     max_sweeps: int | None = None,
 ):
     """Batched fixpoint SSSP from S sources on CSR operands.  Returns
-    (D (S, n), sweeps); per-source rows equal S single-source solves run to
-    their joint fixpoint (the sweep count is the max over sources).  pred
-    is recovered on demand — api.recover_pred reuses the O(m) recovery per
-    row."""
+    ``(D (S, n), sweeps, converged)``; per-source rows equal S
+    single-source solves run to their joint fixpoint (the sweep count is
+    the max over sources).  ``converged`` is the joint flag — False means
+    at least one row may sit above its fixpoint (same guardrail contract
+    as :func:`sssp_bellman_csr`).  pred is recovered on demand —
+    api.recover_pred reuses the O(m) recovery per row."""
     cap = n if max_sweeps is None else max_sweeps
     sweep = sweep_fn or segment_relax_sweep_multi
     D0 = init_dist(n, sources, csr["w"].dtype)
@@ -159,8 +172,8 @@ def sssp_multisource_csr(
         return new, D, it + 1
 
     prev0 = jnp.full_like(D0, -1.0)
-    D, _, sweeps = lax.while_loop(cond, body, (D0, prev0, jnp.int32(0)))
-    return D, sweeps
+    D, prev, sweeps = lax.while_loop(cond, body, (D0, prev0, jnp.int32(0)))
+    return D, sweeps, ~jnp.any(D != prev)
 
 
 def predecessors_from_dist_csr(dist: jax.Array, csr: dict, source) -> jax.Array:

@@ -290,14 +290,16 @@ def frontier_fixpoint(
     a cold solve reaches, bitwise (min over the same f32 path sums).
 
     Must be called inside jit (trace-time only).  Returns
-    ``(dist, sweeps, edges_relaxed)`` with ``edges_relaxed`` accumulated
-    on top of ``edges0``.
+    ``(dist, sweeps, edges_relaxed, converged)`` with ``edges_relaxed``
+    accumulated on top of ``edges0`` and ``converged`` True iff the loop
+    exited because the fixpoint (or the target's settled condition) was
+    reached rather than because the sweep ``cap`` ran out — the solver
+    guardrail serve/errors.NotConverged consumes.
     """
     limit0 = jnp.float32(0.0 if delta is None else delta)
 
-    def cond(carry):
-        dist, pending, _, it, _ = carry
-        go = (it < cap) & jnp.any(pending)
+    def settled_or_done(dist, pending):
+        done = ~jnp.any(pending)
         if target is not None:
             dt = dist[target]
             # settled once no pending label is below the target's: every
@@ -307,8 +309,12 @@ def frontier_fixpoint(
                 # an admissible bound pins the label from below; label >=
                 # true distance always, so equality at the bound is final.
                 settled = settled | (dt <= target_lb)
-            go = go & ~settled
-        return go
+            done = done | settled
+        return done
+
+    def cond(carry):
+        dist, pending, _, it, _ = carry
+        return (it < cap) & ~settled_or_done(dist, pending)
 
     def body(carry):
         dist, pending, limit, it, edges = carry
@@ -330,11 +336,11 @@ def frontier_fixpoint(
         pending = (pending & ~active) | improved
         return new, pending, limit, it + 1, edges + E
 
-    dist, _, _, sweeps, edges = lax.while_loop(
+    dist, pending, _, sweeps, edges = lax.while_loop(
         cond, body,
         (dist0, pending0, limit0, jnp.int32(0), jnp.int32(edges0)),
     )
-    return dist, sweeps, edges
+    return dist, sweeps, edges, settled_or_done(dist, pending)
 
 
 @functools.partial(
@@ -354,9 +360,14 @@ def sssp_frontier(
 ):
     """Frontier-compacted fixpoint SSSP on :func:`frontier_operands`.
 
-    Returns ``(dist, pred, num_sweeps, edges_relaxed)`` — the last being
-    the total frontier out-degree summed over sweeps, the engine's actual
-    relaxation work (compare ``nnz * num_sweeps`` for ``bellman_csr``).
+    Returns ``(dist, pred, num_sweeps, edges_relaxed, converged)`` —
+    ``edges_relaxed`` being the total frontier out-degree summed over
+    sweeps, the engine's actual relaxation work (compare ``nnz *
+    num_sweeps`` for ``bellman_csr``), and ``converged`` the guardrail
+    flag: False iff ``max_sweeps=`` stopped the loop before the pending
+    set drained (or, for target solves, before the target settled) — the
+    labels may then sit above their fixpoint and must not be served as
+    exact (serve/errors.NotConverged).
 
     ``delta`` enables the Δ-bucket schedule (see module docstring): when a
     bucket drains, the same sweep advances the limit and immediately
@@ -377,7 +388,7 @@ def sssp_frontier(
     cap = sweep_cap(n, delta, max_sweeps)
     dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
     pending0 = dist0 < INF
-    dist, sweeps, edges = frontier_fixpoint(
+    dist, sweeps, edges, converged = frontier_fixpoint(
         ops, dist0, pending0, n=n, sweep=sweep, cap=cap, delta=delta,
         target=target, target_lb=target_lb,
     )
@@ -386,6 +397,6 @@ def sssp_frontier(
         # off their fixpoint, so the O(m) recovery would produce a
         # part-invalid tree every caller discards anyway — skip it
         # (trace-time branch: target's presence already keys the trace).
-        return dist, None, sweeps, edges
+        return dist, None, sweeps, edges, converged
     pred = predecessors_from_dist_csr(dist, ops, source)
-    return dist, pred, sweeps, edges
+    return dist, pred, sweeps, edges, converged

@@ -89,7 +89,11 @@ def sssp_bellman_csr_sharded(
     ops: dict | None = None,
 ):
     """Sharded fixpoint SSSP on a CsrPartition.  Returns
-    ``(dist (n_pad,), pred (n_pad,), sweeps)``; valid entries ``[:n]``.
+    ``(dist (n_pad,), pred (n_pad,), sweeps, converged)``; valid entries
+    ``[:n]``.  ``converged`` (0/1) is the replicated guardrail flag:
+    0 iff ``max_sweeps=`` capped the loop before the gathered vector
+    stopped changing (labels may sit above their fixpoint — see
+    serve/errors.NotConverged).
 
     Per sweep: local O(m/P) segment-min over the owner's incoming arcs,
     one tiled all-gather of the (loc_n,) block — the same one-collective-
@@ -127,7 +131,7 @@ def _build_bellman(mesh, axis, n_pad, loc_n, cap):
         shard_map,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
-        out_specs=(P(axis), P(axis), P()),
+        out_specs=(P(axis), P(axis), P(), P()),
     )
     def run(in_src, in_dst_loc, in_w, src):
         in_src, in_dst_loc, in_w = in_src[0], in_dst_loc[0], in_w[0]
@@ -155,7 +159,11 @@ def _build_bellman(mesh, axis, n_pad, loc_n, cap):
             return new, dist, it + 1
 
         it0 = pvary(jnp.int32(0), axis_tuple(axis))
-        dist, _, sweeps = lax.while_loop(cond, body, (dist0, prev0, it0))
+        dist, prev, sweeps = lax.while_loop(cond, body, (dist0, prev0, it0))
+        # every device computes the identical flag from the identical
+        # gathered vectors; the psum//nprocs makes replication explicit
+        # (same pattern as the sweeps counter below).
+        conv = (~jnp.any(dist != prev)).astype(jnp.int32)
 
         # local pred recovery from the owner's own arcs (sentinel arcs are
         # INF and can only attain on rows whose best is INF, which the
@@ -169,7 +177,8 @@ def _build_bellman(mesh, axis, n_pad, loc_n, cap):
         owned = v_base + jnp.arange(loc_n, dtype=jnp.int32)
         reached = jnp.isfinite(mine) & (u_best < n_pad)
         pred = jnp.where(reached & (owned != src), u_best, -1)
-        return mine, pred, lax.psum(sweeps, axis) // nprocs
+        return (mine, pred, lax.psum(sweeps, axis) // nprocs,
+                lax.psum(conv, axis) // nprocs)
 
     return jax.jit(run)
 
@@ -186,7 +195,11 @@ def sssp_frontier_sharded(
     ops: dict | None = None,
 ):
     """Sharded frontier-compacted SSSP on a CsrPartition.  Returns
-    ``(dist (n_pad,), sweeps, edges_relaxed)``; valid entries ``[:n]``.
+    ``(dist (n_pad,), sweeps, edges_relaxed, converged)``; valid entries
+    ``[:n]``.  ``converged`` (0/1, replicated) is 0 iff ``max_sweeps=``
+    stopped the loop while some owner still had an improving frontier —
+    the labels may then sit above their fixpoint (serve/errors.
+    NotConverged is the serving-layer consumer).
     pred is recovered by the caller at the fixpoint (api.shortest_paths
     reuses the O(m) single-device recovery — the tree is a pure function
     of (dist, graph), so nothing is lost by recovering off-engine).
@@ -227,7 +240,7 @@ def _build_frontier(mesh, axis, n_pad, loc_n, nnz_max, cap, CH, RC):
         shard_map,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
-        out_specs=(P(axis), P(), P()),
+        out_specs=(P(axis), P(), P(), P()),
     )
     def run(out_indptr, out_dst_loc, out_w, src):
         out_indptr, out_dst_loc, out_w = (
@@ -289,10 +302,13 @@ def _build_frontier(mesh, axis, n_pad, loc_n, nnz_max, cap, CH, RC):
         it0 = pvary(jnp.int32(0), axis_tuple(axis))
         e0 = pvary(jnp.int32(0), axis_tuple(axis))
         go0 = pvary(jnp.bool_(True), axis_tuple(axis))
-        dist, _, sweeps, edges, _ = lax.while_loop(
+        dist, _, sweeps, edges, go = lax.while_loop(
             cond, body, (dist0, fmask0, it0, e0, go0))
+        # go is the psummed work-remains flag (replicated): exiting with
+        # it still set means the cap fired mid-convergence.
+        conv = (~go).astype(jnp.int32)
         return (dist, lax.psum(sweeps, axis) // nprocs,
-                lax.psum(edges, axis))
+                lax.psum(edges, axis), lax.psum(conv, axis) // nprocs)
 
     return jax.jit(run)
 
@@ -310,7 +326,9 @@ def sssp_multisource_csr_sharded(
 ):
     """Batched vertex-partitioned SSSP from S sources on a CsrPartition —
     the multisource coalescing of :func:`sssp_frontier_sharded`.  Returns
-    ``(D (S, n_pad), sweeps, edges_relaxed)``; valid columns ``[:n]``.
+    ``(D (S, n_pad), sweeps, edges_relaxed, converged)``; valid columns
+    ``[:n]``.  ``converged`` (0/1, replicated) is the joint guardrail
+    flag over all S rows, same contract as the other sharded engines.
 
     Per sweep each owner compacts the UNION over sources of its owned
     improved vertices and the devices exchange ``(global id, per-source
@@ -362,7 +380,7 @@ def _build_multisource_frontier(mesh, axis, n_pad, loc_n, cap, CH, RC, S):
         shard_map,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
-        out_specs=(P(None, axis), P(), P()),
+        out_specs=(P(None, axis), P(), P(), P()),
     )
     def run(out_indptr, out_dst_loc, out_w, srcs):
         out_indptr, out_dst_loc, out_w = (
@@ -427,9 +445,10 @@ def _build_multisource_frontier(mesh, axis, n_pad, loc_n, cap, CH, RC, S):
         it0 = pvary(jnp.int32(0), axis_tuple(axis))
         e0 = pvary(jnp.int32(0), axis_tuple(axis))
         go0 = pvary(jnp.bool_(True), axis_tuple(axis))
-        D, _, sweeps, edges, _ = lax.while_loop(
+        D, _, sweeps, edges, go = lax.while_loop(
             cond, body, (D0, fmask0, it0, e0, go0))
+        conv = (~go).astype(jnp.int32)
         return (D, lax.psum(sweeps, axis) // nprocs,
-                lax.psum(edges, axis))
+                lax.psum(edges, axis), lax.psum(conv, axis) // nprocs)
 
     return jax.jit(run)

@@ -157,15 +157,15 @@ def sssp_frontier_dynamic(
 ):
     """Cold frontier solve on dynamic operands (the repair benchmark's
     fair "full re-solve" baseline, and the initial solve the first repair
-    chains from).  Returns ``(dist, pred, sweeps, edges_relaxed)`` with
-    pred recovered over base + overlay arcs."""
+    chains from).  Returns ``(dist, pred, sweeps, edges_relaxed,
+    converged)`` with pred recovered over base + overlay arcs."""
     sweep = make_dynamic_flat_sweep_fn(chunk)
     cap = sweep_cap(n, delta, max_sweeps)
     dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
-    dist, sweeps, edges = frontier_fixpoint(
+    dist, sweeps, edges, conv = frontier_fixpoint(
         ops, dist0, dist0 < INF, n=n, sweep=sweep, cap=cap, delta=delta)
     pred = predecessors_from_dist_dynamic(dist, ops, source)
-    return dist, pred, sweeps, edges
+    return dist, pred, sweeps, edges, conv
 
 
 def solve_dynamic(dyn: DynamicGraph, source: int, *,
@@ -173,11 +173,12 @@ def solve_dynamic(dyn: DynamicGraph, source: int, *,
                   chunk: int = 1024) -> SsspResult:
     """Full frontier solve of the CURRENT version of ``dyn`` — no
     container rebuild, exact fixpoint of :meth:`DynamicGraph.snapshot`."""
-    d, p, s, e = sssp_frontier_dynamic(
+    d, p, s, e, c = sssp_frontier_dynamic(
         dyn.dyn_ops(), jnp.int32(source), n=dyn.n, chunk=chunk, delta=delta)
     return SsspResult(np.asarray(d), np.asarray(p), int(s),
                       "frontier_dynamic", edges_relaxed=int(e),
-                      sources=np.asarray([int(source)], np.int32))
+                      sources=np.asarray([int(source)], np.int32),
+                      converged=bool(c))
 
 
 # ---------------------------------------------------------------------------
@@ -212,9 +213,11 @@ def sssp_repair(
 
     S and U are baked into the array shapes, so padding them to fixed
     buckets keeps every repair on one compiled executable across
-    versions.  Returns ``(dist, pred, sweeps, edges_relaxed, cone)``;
-    dist/pred are bitwise-equal to a cold solve on the mutated graph
-    (module docstring), ``cone`` is the invalidated-cone population.
+    versions.  Returns ``(dist, pred, sweeps, edges_relaxed, cone,
+    converged)``; dist/pred are bitwise-equal to a cold solve on the
+    mutated graph (module docstring), ``cone`` is the invalidated-cone
+    population and ``converged`` the guardrail flag (False iff
+    ``max_sweeps=`` capped the re-push before its fixpoint).
     """
     idx = jnp.arange(n, dtype=jnp.int32)
     # --- invalidated cone: pred-tree descendants of the seed heads, by
@@ -252,11 +255,11 @@ def sssp_repair(
     # --- one shared push from everything that moved below its reset.
     pending0 = dist3 < dist1
     cap = sweep_cap(n, delta, max_sweeps)
-    dist, sweeps, edges = frontier_fixpoint(
+    dist, sweeps, edges, conv = frontier_fixpoint(
         ops, dist3, pending0, n=n, sweep=make_dynamic_flat_sweep_fn(chunk),
         cap=cap, delta=delta, edges0=E0)
     pred = predecessors_from_dist_dynamic(dist, ops, source)
-    return dist, pred, sweeps, edges, cone
+    return dist, pred, sweeps, edges, cone, conv
 
 
 @dataclasses.dataclass(frozen=True)
@@ -330,14 +333,15 @@ def repair_sssp(
     uw = np.full(U, np.inf, np.float32)
     for i, (a, b, w) in enumerate(upds):
         us[i], ud[i], uw[i] = a, b, w
-    d, p, s, e, cone = sssp_repair(
+    d, p, s, e, cone, conv = sssp_repair(
         dyn.dyn_ops(), jnp.asarray(dist_old), jnp.asarray(pred_old),
         jnp.int32(source), jnp.asarray(seed_arr), jnp.asarray(us),
         jnp.asarray(ud), jnp.asarray(uw),
         n=dyn.n, chunk=chunk, delta=delta)
     res = SsspResult(np.asarray(d), np.asarray(p), int(s), "repair",
                      edges_relaxed=int(e),
-                     sources=np.asarray([source], np.int32))
+                     sources=np.asarray([source], np.int32),
+                     converged=bool(conv))
     return res, RepairStats(cone=int(cone), seeds=len(seeds),
                             updates=len(upds), shortcut=False)
 

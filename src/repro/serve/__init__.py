@@ -9,12 +9,18 @@ solved rows; ``dispatch`` is the engine-selection seam routing
 large-graph solves to the vertex-partitioned sharded engines on a
 cached mesh; ``landmarks`` precomputes ALT bounds per graph;
 ``workload`` generates the synthetic open-loop traces the driver
-(repro/launch/sssp_serve.py) replays.
+(repro/launch/sssp_serve.py) replays; ``errors`` is the typed failure
+taxonomy every ``Answer.status`` draws from and ``faults`` the seeded
+chaos-injection plans the scheduler probes (README.md §Robustness).
 """
 from repro.serve.cache import DistanceCache
 from repro.serve.dispatch import (DispatchPolicy, EngineChoice,
                                   default_policy, serving_mesh,
                                   set_default_policy)
+from repro.serve.errors import (STATUS_OK, STATUSES, DeadlineExceeded,
+                                GraphGone, NotConverged, QueryRejected,
+                                SchedulerStalled, ServeError, SolveFailed)
+from repro.serve.faults import FaultPlan, FaultRecord, InjectedFault, SITES
 from repro.serve.landmarks import LandmarkSet, build_landmarks
 from repro.serve.registry import GraphHandle, GraphRegistry
 from repro.serve.scheduler import (Answer, MicroBatchScheduler, Mutation,
@@ -24,18 +30,31 @@ from repro.serve.workload import (LatencyRecorder, MutationEvent, SCENARIOS,
 
 __all__ = [
     "Answer",
+    "DeadlineExceeded",
     "DispatchPolicy",
     "DistanceCache",
     "EngineChoice",
+    "FaultPlan",
+    "FaultRecord",
+    "GraphGone",
     "GraphHandle",
     "GraphRegistry",
+    "InjectedFault",
     "LandmarkSet",
     "LatencyRecorder",
     "MicroBatchScheduler",
     "Mutation",
     "MutationEvent",
+    "NotConverged",
     "Query",
+    "QueryRejected",
     "SCENARIOS",
+    "SITES",
+    "STATUSES",
+    "STATUS_OK",
+    "SchedulerStalled",
+    "ServeError",
+    "SolveFailed",
     "TraceEvent",
     "build_landmarks",
     "default_policy",

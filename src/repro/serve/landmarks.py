@@ -147,6 +147,6 @@ def build_landmarks(cg, k: int, *, seed: int = 0,
     if ids is None:
         ids = sample_landmark_ids(cg.n, k, seed=seed)
     ops = csr_ops if csr_ops is not None else csr_operands(cg)
-    D, _ = sssp_multisource_csr(ops, np.asarray(ids, np.int32), n=cg.n,
-                                sweep_fn=sweep_fn)
+    D, _, _ = sssp_multisource_csr(ops, np.asarray(ids, np.int32), n=cg.n,
+                                   sweep_fn=sweep_fn)
     return LandmarkSet(ids=np.asarray(ids, np.int32), D=np.asarray(D))

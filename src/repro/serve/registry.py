@@ -372,6 +372,14 @@ class GraphRegistry:
         if name in self._graphs:
             self._maybe_evict()
 
+    def evict(self, name: str) -> None:
+        """Force-evict one graph by name (administrative / chaos-harness
+        seam; LRU budget eviction happens automatically).  Fires the
+        evict hooks like any budget eviction; unknown names are a no-op
+        so a racing double-evict stays idempotent."""
+        if name in self._graphs:
+            self._evict(name)
+
     def _evict(self, name: str) -> None:
         del self._graphs[name]
         self.evicted += 1

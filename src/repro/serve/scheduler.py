@@ -49,10 +49,43 @@ accept **mutation ticks**: ``submit_mutation`` queues edge edits that
 graph.  The registry's mutate hook then reconciles the distance cache
 per row — rows no delta can touch are re-keyed to the new version
 untouched, up to ``repair_rows`` hot rows are repaired incrementally
-(dynamic/repair.py), the rest invalidated — and the landmark set stales
-lazily.  Engine paths pick up each handle's dynamic sweeps so solves run
-on the mutable overlay operands directly, preserving the bitwise
-guarantee against the mutated snapshot.
+(dynamic/repair.py), the rest invalidated (or retained under their OLD
+version key as degraded-serving candidates, see below) — and the
+landmark set stales lazily.  Engine paths pick up each handle's dynamic
+sweeps so solves run on the mutable overlay operands directly,
+preserving the bitwise guarantee against the mutated snapshot.
+
+**Fault tolerance** (serve/errors.py is the taxonomy):
+
+* ``submit()`` validates eagerly (graph name, non-negative in-range
+  integer endpoints, deadline sanity) and raises ``QueryRejected``
+  instead of poisoning a later tick; with ``max_queue=`` set, a
+  saturated queue rejects the newcomer or sheds the cheapest-to-
+  recompute queued work (p2p before full rows, newest first) —
+  reject-on-saturation backpressure.
+* every post-admission failure becomes a per-query ``Answer`` with a
+  typed ``status`` (``graph_gone``, ``deadline_exceeded``,
+  ``solve_failed``, ``not_converged``) rather than an exception across
+  the tick; transient solve/staging failures are retried with capped
+  exponential backoff (``retry_budget`` attempts per query, backoff
+  measured in ticks).
+* ``tick(now=...)`` answers already-expired queries
+  ``deadline_exceeded`` before solving; under deadline pressure
+  (``deadline - now <= degrade_margin``, or admission overflow on a
+  deadlined query) p2p queries may be served from ALT landmark
+  lower/upper bounds and full-row queries from a stale-but-versioned
+  cache row — always ``exact=False``, via="degraded": the bitwise
+  exactness invariant binds only answers claiming ``exact=True``.
+* a non-``converged`` engine result (``max_sweeps`` cap) is answered
+  ``not_converged`` and its rows are never cached — no silent wrong
+  answers.
+* ``drain()`` has a progress guard: a tick that had eligible work but
+  served zero and retired zero raises ``SchedulerStalled`` instead of
+  looping forever.
+* ``faults=`` accepts a serve/faults.FaultPlan whose seeded schedule is
+  probed at the existing seams (solve, staging, mid-tick eviction,
+  mutation rollback, sweep clipping) — the chaos harness
+  launch/sssp_serve.py --chaos replays and verifies.
 """
 from __future__ import annotations
 
@@ -68,22 +101,31 @@ from repro.core.frontier import sssp_frontier
 
 from repro.serve.cache import DistanceCache
 from repro.serve.dispatch import DispatchPolicy, default_policy
+from repro.serve.errors import (STATUS_OK, DeadlineExceeded, GraphGone,
+                                NotConverged, QueryRejected,
+                                SchedulerStalled, ServeError, SolveFailed)
 from repro.serve.registry import GraphRegistry
 
 VIAS = ("trivial", "cache", "landmark", "batch", "target", "mutate",
-        "error")
+        "degraded", "error")
 
 
 @dataclasses.dataclass
 class Query:
     """One request: ``target is None`` => full ``sssp(source)`` row,
-    else a point-to-point ``dist(source, target)`` scalar."""
+    else a point-to-point ``dist(source, target)`` scalar.  ``deadline``
+    (same clock as ``arrival``) makes the query droppable once passed;
+    ``attempts``/``not_before`` are the retry-backoff state (a query
+    whose solve failed is ineligible until tick ``not_before``)."""
 
     qid: int
     graph: str
     source: int
     target: Optional[int] = None
     arrival: float = 0.0
+    deadline: Optional[float] = None
+    attempts: int = 0
+    not_before: int = 0
 
 
 @dataclasses.dataclass
@@ -107,13 +149,50 @@ class Answer:
                                         # mutate; None iff via == "error"
     via: str                            # one of VIAS
     done_at: float = 0.0                # stamped by the driver (wall clock)
+    status: str = STATUS_OK             # STATUS_OK or a ServeError code
+    exact: bool = True                  # True => bitwise-equal-to-serial
+                                        # guarantee applies to ``value``
+    error: Optional[ServeError] = None  # the typed failure, iff not ok
+    bounds: Optional[tuple] = None      # (lb, ub) for degraded p2p answers
+
+    @property
+    def ok(self) -> bool:
+        return self.status == STATUS_OK
 
 
 class MicroBatchScheduler:
     """See module docstring.  ``max_batch`` caps distinct sources per
     tick per graph (overflow is requeued ahead of newer arrivals);
     ``p2p_solo=False`` disables the target early-exit path (everything
-    residual goes through the batched engine)."""
+    residual goes through the batched engine).
+
+    Robustness knobs (all optional; defaults preserve the permissive
+    pre-fault-tolerance behavior except eager submit validation, which
+    is always on):
+
+    ``max_queue``
+        Bounded-queue admission: a submit that would push the query
+        queue past this raises :class:`QueryRejected` — unless a
+        cheaper-to-recompute queued query (a p2p, newest first) can be
+        shed in its favor, acked ``rejected`` on the next tick.
+    ``retry_budget`` / ``backoff_cap``
+        A query whose solve raised is requeued with capped exponential
+        backoff (``2**(attempts-1)`` ticks, capped) up to
+        ``retry_budget`` attempts, then answered ``solve_failed``.
+    ``max_sweeps``
+        Fixpoint-sweep cap passed to every engine solve; a capped
+        non-converged result is answered ``not_converged`` and its rows
+        are never cached.
+    ``degrade`` / ``degrade_margin``
+        Inexact fallbacks under deadline pressure: p2p from landmark
+        bounds, full rows from a stale-version cache row (retained by
+        the mutate hook when ``degrade`` is on).  ``degrade_margin`` is
+        the seconds-to-deadline threshold below which an admitted query
+        is degraded pre-solve (0.0 = only admission overflow degrades).
+    ``faults``
+        A serve/faults.FaultPlan probed at the solve / stage / evict /
+        mutate / clip seams (chaos harness).
+    """
 
     def __init__(
         self,
@@ -124,15 +203,33 @@ class MicroBatchScheduler:
         p2p_solo: bool = True,
         repair_rows: int = 8,
         dispatch: Optional[DispatchPolicy] = None,
+        max_queue: Optional[int] = None,
+        retry_budget: int = 2,
+        backoff_cap: int = 8,
+        max_sweeps: Optional[int] = None,
+        degrade: bool = True,
+        degrade_margin: float = 0.0,
+        faults=None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if retry_budget < 0:
+            raise ValueError(f"retry_budget must be >= 0, got {retry_budget}")
         self.registry = registry
         self.cache = cache
         self.max_batch = max_batch
         self.p2p_solo = p2p_solo
         self.repair_rows = repair_rows
         self.dispatch = dispatch if dispatch is not None else default_policy()
+        self.max_queue = max_queue
+        self.retry_budget = retry_budget
+        self.backoff_cap = backoff_cap
+        self.max_sweeps = max_sweeps
+        self.degrade = degrade
+        self.degrade_margin = float(degrade_margin)
+        self.faults = faults
         registry.add_evict_hook(cache.purge_graph)
         registry.add_mutate_hook(self._on_mutate)
         self._queue: "collections.deque[Query]" = collections.deque()
@@ -154,20 +251,114 @@ class MicroBatchScheduler:
         self.rows_kept = 0
         self.rows_repaired = 0
         self.rows_invalidated = 0
+        self.rows_staled = 0
         self.repair_edges = 0
         self.last_mutation_error: Optional[str] = None
         self.answered_via = {v: 0 for v in VIAS}
+        self.answered_status: "collections.Counter[str]" = (
+            collections.Counter())
+        # fault-tolerance counters
+        self.submissions_rejected = 0
+        self.shed = 0
+        self.deadline_expired = 0
+        self.degraded_p2p = 0
+        self.degraded_batch = 0
+        self.solve_exceptions = 0
+        self.retries = 0
+        self.not_converged = 0
+        self._shed_acks: list = []          # delivered at next tick's start
+        self._last_tick_stalled = False     # drain()'s progress-guard flag
 
     # -- queue ------------------------------------------------------------
 
+    @staticmethod
+    def _check_vertex(value, what: str) -> int:
+        """Eager endpoint validation: a non-negative integer (bool is an
+        int subclass but never a vertex id)."""
+        if isinstance(value, bool) or not isinstance(
+                value, (int, np.integer)):
+            raise QueryRejected(
+                f"{what} must be an integer vertex id, got "
+                f"{type(value).__name__} {value!r}")
+        v = int(value)
+        if v < 0:
+            raise QueryRejected(f"{what} must be >= 0, got {v}")
+        return v
+
     def submit(self, graph: str, source: int, target: Optional[int] = None,
-               *, arrival: float = 0.0) -> Query:
-        q = Query(qid=self._next_qid, graph=graph, source=int(source),
-                  target=None if target is None else int(target),
-                  arrival=arrival)
+               *, arrival: float = 0.0,
+               deadline: Optional[float] = None) -> Query:
+        """Enqueue one query, validating EAGERLY — a malformed request
+        fails its caller with :class:`QueryRejected` here instead of
+        poisoning the tick that would have drained it.  Range checks run
+        against the graph's current handle when it is registered; an
+        unregistered name is accepted (it may be registered before the
+        serving tick) and answered ``graph_gone`` at tick time if not.
+
+        ``deadline`` (same clock as ``arrival``) marks the query
+        droppable: ``tick(now=...)`` answers it ``deadline_exceeded``
+        once passed, and may serve it degraded under pressure.  With
+        ``max_queue`` set, a full queue either sheds a cheaper queued
+        query in this one's favor or rejects this one (backpressure).
+        """
+        try:
+            if not isinstance(graph, str) or not graph:
+                raise QueryRejected(
+                    f"graph must be a non-empty name string, got {graph!r}")
+            src = self._check_vertex(source, "source")
+            tgt = (None if target is None
+                   else self._check_vertex(target, "target"))
+            if deadline is not None:
+                deadline = float(deadline)
+                if not np.isfinite(deadline):
+                    raise QueryRejected(f"deadline must be finite, got "
+                                        f"{deadline!r}")
+            if graph in self.registry:
+                n = self.registry.get(graph).n
+                for what, v in (("source", src), ("target", tgt)):
+                    if v is not None and v >= n:
+                        raise QueryRejected(
+                            f"{what} {v} out of range for graph {graph!r} "
+                            f"(n={n})")
+        except QueryRejected:
+            self.submissions_rejected += 1
+            raise
+        q = Query(qid=self._next_qid, graph=graph, source=src, target=tgt,
+                  arrival=arrival, deadline=deadline)
         self._next_qid += 1
-        self._queue.append(q)
+        if (self.max_queue is not None
+                and len(self._queue) >= self.max_queue):
+            self._admit_saturated(q)
+        else:
+            self._queue.append(q)
         return q
+
+    def _admit_saturated(self, q: Query) -> None:
+        """Bounded-queue admission: shed the cheapest-to-recompute queued
+        work — a p2p query (bounded early-exit re-solve, its partial row
+        is never cached), newest first (least queue investment) — in the
+        newcomer's favor; if the newcomer is itself in the cheapest
+        class, reject it instead (reject-on-saturation backpressure)."""
+        victim_i = None
+        if q.target is None:
+            for i in range(len(self._queue) - 1, -1, -1):
+                if self._queue[i].target is not None:
+                    victim_i = i
+                    break
+        if victim_i is None:
+            self.submissions_rejected += 1
+            raise QueryRejected(
+                f"queue saturated ({self.max_queue} pending); resubmit "
+                "after a tick drains")
+        victim = self._queue[victim_i]
+        del self._queue[victim_i]
+        self.shed += 1
+        err = QueryRejected(
+            f"shed under saturation in favor of query {q.qid}")
+        self._shed_acks.append(Answer(victim, None, "error",
+                                      status=err.code, exact=False,
+                                      error=err))
+        self._queue.append(q)
 
     def submit_mutation(self, graph: str, op: str, u: int, v: int,
                         w: Optional[float] = None, *,
@@ -204,15 +395,24 @@ class MicroBatchScheduler:
             by_graph.setdefault(m.graph, []).append(m)
         acks = []
         for name, muts in by_graph.items():
+            edits = [m.edit for m in muts]
+            if self.faults is not None and self.faults.roll(
+                    "mutate", graph=name, detail="poisoned edit"):
+                # chaos seam: a poisoned edit forces the registry's
+                # atomic-rollback path — the whole batch must roll back
+                # and every mutation in it is acked rejected.
+                edits = edits + [("update", -1, -1, 1.0)]
             try:
-                self.registry.mutate(name, [m.edit for m in muts])
+                self.registry.mutate(name, edits)
                 version = self.registry.get(name).version
                 acks.extend(Answer(m, version, "mutate") for m in muts)
             except (KeyError, ValueError, IndexError) as e:
                 # unknown/static graph or invalid edit: fail the whole
                 # graph's batch — a half-applied batch would leave the
                 # trace's edge-set bookkeeping unverifiable.
-                acks.extend(Answer(m, None, "error") for m in muts)
+                err = QueryRejected(f"mutation batch rolled back: {e}")
+                acks.extend(Answer(m, None, "error", status=err.code,
+                                   exact=False, error=err) for m in muts)
                 self.last_mutation_error = str(e)
         return acks
 
@@ -223,7 +423,10 @@ class MicroBatchScheduler:
         version untouched; otherwise up to ``repair_rows`` rows are
         REPAIRED in place (pred recovered against the pre-commit
         operands, then one incremental repair on the new ones —
-        dynamic/repair.py) and the rest are invalidated."""
+        dynamic/repair.py) and the rest are invalidated — or, when
+        degraded serving is on, RETAINED under their old version key as
+        stale-but-versioned fallbacks (never served exact: exact lookups
+        only ever consult the current version's key)."""
         import jax.numpy as jnp
 
         from repro.core.api import SsspResult
@@ -235,22 +438,28 @@ class MicroBatchScheduler:
         # walk LRU -> MRU so the re-puts (which append at the MRU end)
         # PRESERVE the graph's recency order; the repair budget still
         # goes to the hottest rows — the affected keys nearest the MRU
-        # end — by slicing the affected list from its tail.
+        # end — by slicing the affected list from its tail.  Only the
+        # PRE-COMMIT version's keys are reconciled: older keys are stale
+        # retainees from earlier batches (this delta says nothing about
+        # their version) and are left for the LRU to age out.
         keys = self.cache.keys_for(name)
         rows = {k: self.cache.peek(k) for k in keys}
-        affected = {k for k in keys
+        prev_version = handle.version - 1
+        current = [k for k in keys if len(k) == 3 and k[1] == prev_version]
+        affected = {k for k in current
                     if row_affected(rows[k], batch, handle.dyn.directed)}
         budget = self.repair_rows if old_ops is not None else 0
-        repair = set([k for k in keys if k in affected][-budget:]
+        repair = set([k for k in current if k in affected][-budget:]
                      if budget else [])
-        for key in keys:
+        for key in current:
             source = key[-1]
             row = rows[key]
-            self.cache.pop(key)
             if key not in affected:
+                self.cache.pop(key)
                 self.cache.put(handle.row_key(source), row)
                 self.rows_kept += 1
             elif key in repair:
+                self.cache.pop(key)
                 pred = predecessors_from_dist_dynamic(
                     jnp.asarray(row), old_ops, jnp.int32(source))
                 prev = SsspResult(
@@ -262,6 +471,12 @@ class MicroBatchScheduler:
                 self.repair_edges += res.edges_relaxed or 0
             else:
                 self.rows_invalidated += 1
+                if self.degrade:
+                    # retained under its OLD version key: invisible to
+                    # exact lookups, available to _try_degraded.
+                    self.rows_staled += 1
+                else:
+                    self.cache.pop(key)
 
     # -- dispatch ---------------------------------------------------------
 
@@ -310,6 +525,39 @@ class MicroBatchScheduler:
                 return Answer(q, float("inf"), "landmark")
         return None
 
+    def _try_degraded(self, handle, q: Query) -> Optional[Answer]:
+        """Inexact fallback under deadline pressure; None if no degraded
+        source exists (the query then solves, or expires).
+
+        p2p: the ALT landmark bracket — value is the UPPER bound (a real
+        path length through the best landmark, so always achievable),
+        with ``bounds=(lb, ub)`` attached.  Full row: the most recently
+        used stale-version cache row for this source (dynamic graphs
+        whose mutate hook retained it).  Both are ``exact=False`` with
+        status "ok" — approximate, not failed."""
+        if not self.degrade:
+            return None
+        if q.target is not None:
+            ls = handle.landmarks_ready()
+            if ls is None:
+                return None
+            ub = ls.upper_bound(q.source, q.target)
+            if not np.isfinite(ub):
+                return None
+            lb = ls.lower_bound(q.source, q.target)
+            self.degraded_p2p += 1
+            return Answer(q, float(ub), "degraded", exact=False,
+                          bounds=(float(lb), float(ub)))
+        if handle.dyn is None:
+            return None
+        for key in reversed(self.cache.keys_for(handle.name)):  # MRU first
+            if (len(key) == 3 and key[2] == q.source
+                    and key[1] != handle.version):
+                self.degraded_batch += 1
+                return Answer(q, self.cache.peek(key), "degraded",
+                              exact=False)
+        return None
+
     # -- engine paths -----------------------------------------------------
 
     def _bucket(self, count: int) -> int:
@@ -321,6 +569,22 @@ class MicroBatchScheduler:
             b *= 2
         return min(b, self.max_batch)
 
+    def _probe(self, site: str, name: str) -> None:
+        """Fault-plan probe at a raising seam (solve / stage)."""
+        if self.faults is not None:
+            self.faults.maybe_raise(site, graph=name)
+
+    def _sweep_cap(self, name: str) -> Optional[int]:
+        """The effective ``max_sweeps`` for one engine solve: the
+        configured cap, unless the fault plan's ``clip`` site fires and
+        forces its (tighter) clip — the solver-guardrail seam.  Probed
+        LAST, after the stage/solve fault seams, so a fired clip always
+        governs a solve that actually runs (a same-attempt injected
+        exception cannot mask it from the chaos reconciliation)."""
+        if self.faults is not None and self.faults.roll("clip", graph=name):
+            return self.faults.clip_sweeps
+        return self.max_sweeps
+
     def _solve_target(self, handle, q: Query) -> Answer:
         """Point-to-point residue of a tick.
 
@@ -330,23 +594,33 @@ class MicroBatchScheduler:
         one ``frontier_sharded`` FULL fixpoint — no early exit exists
         across owners, but the complete row is cacheable, which the
         partial row never is (``dist[target]`` bytes identical either
-        way)."""
+        way).  Raises :class:`NotConverged` when a sweep cap stopped the
+        engine short — capped labels are never served or cached."""
         choice = self.dispatch.choose(handle, kind="p2p")
         if choice.sharded:
             from repro.core.sharded_csr import sssp_frontier_sharded
 
+            self._probe("stage", handle.name)
             parts = handle.partition(choice.nprocs)
             pops = handle.partition_ops(choice.nprocs)
             self.registry.touch_staged(handle.name)
-            d, _, e = sssp_frontier_sharded(
-                parts, q.source, choice.mesh, axis=choice.axis, ops=pops)
-            row = np.asarray(d)[:handle.n]
-            self.cache.put(self._row_key(handle, q.source), row)
+            self._probe("solve", handle.name)
+            ms = self._sweep_cap(handle.name)
+            d, _, e, conv = sssp_frontier_sharded(
+                parts, q.source, choice.mesh, axis=choice.axis, ops=pops,
+                max_sweeps=ms)
             self.target_solves += 1
             self.sharded_p2p += 1
             self.sharded_sources += 1
             self.sharded_edges += int(e)
+            if not int(conv):
+                raise NotConverged(
+                    f"sharded p2p solve on {handle.name!r} capped at "
+                    f"max_sweeps={ms}")
+            row = np.asarray(d)[:handle.n]
+            self.cache.put(self._row_key(handle, q.source), row)
             return Answer(q, float(row[q.target]), "target")
+        self._probe("stage", handle.name)
         ops = handle.frontier_ops()
         self.registry.touch_staged(handle.name)
         lb = None
@@ -354,17 +628,25 @@ class MicroBatchScheduler:
         if ls is not None:
             lb = ls.conservative_lb(q.source, q.target)
             lb = None if not np.isfinite(lb) else jnp.float32(lb)
-        d, _, _, _ = sssp_frontier(
+        self._probe("solve", handle.name)
+        ms = self._sweep_cap(handle.name)
+        d, _, _, _, conv = sssp_frontier(
             ops, jnp.int32(q.source), n=handle.n,
-            sweep_fn=handle.frontier_sweep_fn(),
+            sweep_fn=handle.frontier_sweep_fn(), max_sweeps=ms,
             target=jnp.int32(q.target), target_lb=lb,
         )
         self.target_solves += 1
+        if not bool(conv):
+            raise NotConverged(
+                f"p2p solve on {handle.name!r} capped at max_sweeps={ms} "
+                "before the target settled")
         return Answer(q, float(np.asarray(d)[q.target]), "target")
 
     def _solve_batch(self, handle, queries: list) -> list:
         """One bucket-padded multisource solve answering ``queries``
-        (all on ``handle``'s graph, <= max_batch distinct sources)."""
+        (all on ``handle``'s graph, <= max_batch distinct sources).
+        Raises :class:`NotConverged` on a capped solve BEFORE any row is
+        cached — non-fixpoint labels never enter the cache."""
         distinct: list[int] = []
         seen: set[int] = set()
         for q in queries:
@@ -377,26 +659,40 @@ class MicroBatchScheduler:
         if choice.sharded:
             from repro.core.sharded_csr import sssp_multisource_csr_sharded
 
+            self._probe("stage", handle.name)
             parts = handle.partition(choice.nprocs)
             pops = handle.partition_ops(choice.nprocs)
             self.registry.touch_staged(handle.name)
-            D, _, e = sssp_multisource_csr_sharded(
+            self._probe("solve", handle.name)
+            ms = self._sweep_cap(handle.name)
+            D, _, e, conv = sssp_multisource_csr_sharded(
                 parts, jnp.asarray(padded, jnp.int32), choice.mesh,
-                axis=choice.axis, ops=pops)
+                axis=choice.axis, ops=pops, max_sweeps=ms)
             rows = np.asarray(D)[:, :handle.n]
+            converged = bool(int(conv))
             self.sharded_batches += 1
             self.sharded_sources += len(distinct)
             self.sharded_edges += int(e)
         else:
-            D, _ = sssp_multisource_csr(
-                handle.csr_ops(), jnp.asarray(padded, jnp.int32),
-                n=handle.n, sweep_fn=handle.multisource_sweep_fn())
+            self._probe("stage", handle.name)
+            ops = handle.csr_ops()
             self.registry.touch_staged(handle.name)
+            self._probe("solve", handle.name)
+            ms = self._sweep_cap(handle.name)
+            D, _, conv = sssp_multisource_csr(
+                ops, jnp.asarray(padded, jnp.int32),
+                n=handle.n, sweep_fn=handle.multisource_sweep_fn(),
+                max_sweeps=ms)
             rows = np.asarray(D)
+            converged = bool(conv)
         self.engine_batches += 1
         self.engine_sources += len(distinct)
         self.dedup_saved += len(queries) - len(distinct)
         self.occupancy_sum += len(distinct) / bucket
+        if not converged:
+            raise NotConverged(
+                f"batched solve on {handle.name!r} ({len(distinct)} "
+                f"sources) capped at max_sweeps={ms}")
         by_source = {s: rows[i] for i, s in enumerate(distinct)}
         out = []
         for q in queries:
@@ -408,34 +704,91 @@ class MicroBatchScheduler:
 
     # -- the tick ---------------------------------------------------------
 
-    def tick(self) -> list:
+    def _fail(self, q, err: ServeError) -> Answer:
+        """A typed per-query failure answer (never raised mid-tick)."""
+        return Answer(q, None, "error", status=err.code, exact=False,
+                      error=err)
+
+    def _retry_or_fail(self, queries: list, exc: Exception,
+                       requeue: list) -> list:
+        """A solve raised: requeue each query with capped exponential
+        backoff (ineligible for ``2**(attempts-1)`` ticks, capped at
+        ``backoff_cap``) until its retry budget is spent, then answer it
+        ``solve_failed``."""
+        failed = []
+        for q in queries:
+            q.attempts += 1
+            if q.attempts > self.retry_budget:
+                failed.append(self._fail(q, SolveFailed(
+                    f"solve raised on attempt {q.attempts} "
+                    f"(budget {self.retry_budget} retries): {exc}")))
+            else:
+                q.not_before = self.ticks + min(
+                    2 ** (q.attempts - 1), self.backoff_cap)
+                self.retries += 1
+                requeue.append(q)
+        return failed
+
+    def tick(self, now: Optional[float] = None) -> list:
         """Drain the queues once; returns the Answers produced this tick
         (overflow beyond max_batch distinct sources per graph is requeued
         ahead of newer arrivals).  Pending mutations are applied FIRST —
         one committed batch per graph — so every query drained in the
         same tick is answered against the post-mutation version (the
-        interleaving contract launch/sssp_dynamic.py's verifier pins)."""
-        if not self._queue and not self._mutations:
+        interleaving contract launch/sssp_dynamic.py's verifier pins).
+
+        ``now`` (the driver's clock, same units as arrival/deadline)
+        activates deadline handling: expired queries are answered
+        ``deadline_exceeded`` before any solve, and near-deadline ones
+        (within ``degrade_margin``) may be served degraded.  A solve
+        exception fails only ITS queries (retried under backoff first) —
+        never the tick: every other graph's drained queries still serve.
+        """
+        self._last_tick_stalled = False
+        if not self._queue and not self._mutations and not self._shed_acks:
             return []
         self.ticks += 1
-        mut_acks = self._apply_mutations()
-        if not self._queue:
-            for a in mut_acks:
-                self.answered_via[a.via] += 1
-            return mut_acks
-        batch, self._queue = list(self._queue), collections.deque()
+        retries0 = self.retries
+        answers: list = list(self._shed_acks)
+        self._shed_acks = []
+        answers.extend(self._apply_mutations())
+        # backoff gate: queries parked by a failed solve sit out their
+        # not_before ticks without blocking the rest of the queue.
+        batch: list = []
+        held: "collections.deque[Query]" = collections.deque()
+        for q in self._queue:
+            (batch if q.not_before <= self.ticks else held).append(q)
+        self._queue = held
+        if now is not None:
+            live = []
+            for q in batch:
+                if q.deadline is not None and now > q.deadline:
+                    self.deadline_expired += 1
+                    answers.append(self._fail(q, DeadlineExceeded(
+                        f"deadline {q.deadline:.6f} passed at "
+                        f"now={now:.6f} before serving")))
+                else:
+                    live.append(q)
+            batch = live
         by_graph: "collections.OrderedDict[str, list]" = (
             collections.OrderedDict())
         for q in batch:
             by_graph.setdefault(q.graph, []).append(q)
-        answers: list = []
         requeue: list = []
         for name, queries in by_graph.items():
+            if (self.faults is not None and name in self.registry
+                    and self.faults.roll("evict", graph=name)):
+                # chaos seam: the graph vanishes mid-tick, after
+                # admission but before its solve — the evicted-graph
+                # race the GraphGone path below must absorb.
+                self.registry.evict(name)
             if name not in self.registry:
                 # the graph was evicted (or never registered): fail these
-                # queries with error answers rather than crashing the
+                # queries with typed answers rather than crashing the
                 # tick and losing every other graph's drained queries.
-                answers.extend(Answer(q, None, "error") for q in queries)
+                err = GraphGone(f"graph {name!r} is not registered "
+                                "(evicted or never admitted)")
+                answers.extend(self._fail(q, err) for q in queries)
                 continue
             handle = self.registry.get(name)
             need_engine = []
@@ -445,6 +798,20 @@ class MicroBatchScheduler:
                     need_engine.append(q)
                 else:
                     answers.append(ans)
+            if now is not None and self.degrade and need_engine:
+                # deadline pressure: a query too close to its deadline to
+                # risk an engine solve takes the degraded fallback when
+                # one exists (else it still solves — it may make it).
+                still = []
+                for q in need_engine:
+                    if (q.deadline is not None
+                            and q.deadline - now <= self.degrade_margin):
+                        d = self._try_degraded(handle, q)
+                        if d is not None:
+                            answers.append(d)
+                            continue
+                    still.append(q)
+                need_engine = still
             if not need_engine:
                 continue
             # cap distinct sources at max_batch; queries on uncovered
@@ -463,24 +830,59 @@ class MicroBatchScheduler:
                     take.append(q)
                 else:
                     defer.append(q)
-            requeue.extend(defer)
-            if (self.p2p_solo and len(take) == 1
-                    and take[0].target is not None):
-                answers.append(self._solve_target(handle, take[0]))
-            else:
-                answers.extend(self._solve_batch(handle, take))
+            for q in defer:
+                # admission overflow on a deadlined query: a degraded
+                # answer NOW beats an exact answer after the deadline.
+                d = (self._try_degraded(handle, q)
+                     if q.deadline is not None else None)
+                if d is not None:
+                    answers.append(d)
+                else:
+                    requeue.append(q)
+            if not take:
+                continue
+            try:
+                if (self.p2p_solo and len(take) == 1
+                        and take[0].target is not None):
+                    answers.append(self._solve_target(handle, take[0]))
+                else:
+                    answers.extend(self._solve_batch(handle, take))
+            except NotConverged as e:
+                # a capped solve is NOT transient — retrying under the
+                # same cap re-runs the identical truncation, so answer
+                # typed immediately (satisfying the guardrail contract).
+                self.not_converged += len(take)
+                answers.extend(self._fail(q, e) for q in take)
+            except Exception as e:    # injected or real engine failure
+                self.solve_exceptions += 1
+                answers.extend(self._retry_or_fail(take, e, requeue))
         for q in reversed(requeue):
             self._queue.appendleft(q)
-        answers = mut_acks + answers
+        # progress accounting for drain()'s guard: a tick progressed if
+        # it answered anything, advanced some query's retry state, or
+        # simply had no eligible work (backoff holds drain by design).
+        self._last_tick_stalled = (bool(batch) and not answers
+                                   and self.retries == retries0)
         for a in answers:
             self.answered_via[a.via] += 1
+            self.answered_status[a.status] += 1
         return answers
 
-    def drain(self) -> list:
-        """Tick until the queues are empty (closed-loop replay)."""
+    def drain(self, now: Optional[float] = None) -> list:
+        """Tick until the queues are empty (closed-loop replay).
+
+        Progress guard: a tick that had eligible work but served zero
+        answers and retired zero queries (everything requeued unchanged)
+        raises :class:`SchedulerStalled` instead of spinning forever —
+        the failure mode a requeue-path bug would otherwise turn into a
+        silent infinite loop."""
         out = []
         while self.pending:
-            out.extend(self.tick())
+            out.extend(self.tick(now))
+            if self._last_tick_stalled:
+                raise SchedulerStalled(
+                    f"tick {self.ticks} had eligible work but served "
+                    f"zero and retired zero ({self.pending} pending)")
         return out
 
     # -- metrics ----------------------------------------------------------
@@ -505,8 +907,20 @@ class MicroBatchScheduler:
             "rows_kept": self.rows_kept,
             "rows_repaired": self.rows_repaired,
             "rows_invalidated": self.rows_invalidated,
+            "rows_staled": self.rows_staled,
             "repair_edges": self.repair_edges,
             "answered_via": dict(self.answered_via),
+            "answered_status": dict(self.answered_status),
+            "submissions_rejected": self.submissions_rejected,
+            "shed": self.shed,
+            "deadline_expired": self.deadline_expired,
+            "degraded_p2p": self.degraded_p2p,
+            "degraded_batch": self.degraded_batch,
+            "solve_exceptions": self.solve_exceptions,
+            "retries": self.retries,
+            "not_converged": self.not_converged,
+            "faults": (self.faults.summary()
+                       if self.faults is not None else None),
             "cache": self.cache.stats(),
             "registry": self.registry.stats(),
         }

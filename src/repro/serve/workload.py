@@ -39,6 +39,8 @@ class TraceEvent:
     graph: str
     source: int
     target: Optional[int]       # None => full sssp row
+    deadline: Optional[float] = None    # absolute (trace clock); None =
+                                        # the query never expires
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,13 +82,17 @@ def make_trace(
     zipf_a: float = 1.1,
     p2p_frac: float = 0.85,
     hot_seed: Optional[int] = None,
+    deadline: Optional[float] = None,
 ) -> list:
     """Generate one open-loop trace (see module docstring).  ``rate`` is
     the mean arrival rate in queries/s; ``p2p_frac`` only applies to the
     p2p scenario (the rest of its queries are full rows).  ``hot_seed``
     pins the Zipf rank->vertex permutation independently of ``seed``, so
     differently-seeded traces target the same hot set (the steady-state
-    serving shape benchmarks/serve_bench.py measures)."""
+    serving shape benchmarks/serve_bench.py measures).  ``deadline``
+    stamps every event with ``arrival + deadline`` seconds (the
+    per-query latency SLO the overload benchmark and chaos driver feed
+    to ``submit(deadline=...)``); None leaves queries unexpirable."""
     if scenario not in SCENARIOS:
         raise ValueError(f"unknown scenario {scenario!r}; "
                          f"choose from {SCENARIOS}")
@@ -118,7 +124,10 @@ def make_trace(
         tgt = None
         if scenario == "p2p" and p2p_draw[i] < p2p_frac:
             tgt = int(pools[gi][2 * i + 1])
-        events.append(TraceEvent(float(arrivals[i]), name, src, tgt))
+        t = float(arrivals[i])
+        events.append(TraceEvent(
+            t, name, src, tgt,
+            deadline=None if deadline is None else t + deadline))
     return events
 
 

@@ -179,7 +179,7 @@ def test_csr_engine_has_no_dead_frontier_flag():
     assert "use_frontier" not in sig.parameters
     cg = C.random_csr_graph(70, 280, seed=5)
     ops = csr_operands(cg)
-    d0, _, _ = sssp_bellman_csr(ops, jnp.int32(0), n=cg.n)
+    d0, _, _, _ = sssp_bellman_csr(ops, jnp.int32(0), n=cg.n)
     d1 = shortest_paths(cg, 0, engine="frontier").dist
     assert np.array_equal(np.asarray(d0), np.asarray(d1))
 

@@ -372,23 +372,23 @@ def test_dynamic_sweeps_drive_core_engines_bitwise():
     snap = dyn.snapshot()
     ops = dyn.dyn_ops()
     # bellman fixpoint with the dynamic segment sweep
-    d, _, _ = sssp_bellman_csr(ops, jnp.int32(4), n=dyn.n,
-                               sweep_fn=dynamic_segment_sweep)
+    d, _, _, _ = sssp_bellman_csr(ops, jnp.int32(4), n=dyn.n,
+                                  sweep_fn=dynamic_segment_sweep)
     assert np.array_equal(np.asarray(d),
                           shortest_paths(snap, 4, engine="serial").dist)
     # batched multisource with the vmapped sweep
-    D, _ = sssp_multisource_csr(ops, jnp.asarray([0, 7, 33], jnp.int32),
-                                n=dyn.n,
-                                sweep_fn=dynamic_segment_sweep_multi)
+    D, _, _ = sssp_multisource_csr(ops, jnp.asarray([0, 7, 33], jnp.int32),
+                                   n=dyn.n,
+                                   sweep_fn=dynamic_segment_sweep_multi)
     for i, s in enumerate((0, 7, 33)):
         assert np.array_equal(
             np.asarray(D)[i],
             shortest_paths(snap, s, engine="serial").dist)
     # frontier with the dynamic flat sweep + target early exit
     full = shortest_paths(snap, 2, engine="serial").dist
-    d, _, _, _ = sssp_frontier(ops, jnp.int32(2), n=dyn.n,
-                               sweep_fn=make_dynamic_flat_sweep_fn(),
-                               target=jnp.int32(60))
+    d, _, _, _, _ = sssp_frontier(ops, jnp.int32(2), n=dyn.n,
+                                  sweep_fn=make_dynamic_flat_sweep_fn(),
+                                  target=jnp.int32(60))
     assert np.asarray(d)[60] == full[60]
 
 

@@ -90,11 +90,13 @@ def test_frontier_small_chunk_multi_step_inner_loop():
     bitwise identical to the single-chunk default."""
     cg = C.random_csr_graph(80, 320, seed=13)
     ops = frontier_operands(cg)
-    d_ref, p_ref, s_ref, e_ref = sssp_frontier(ops, jnp.int32(0), n=cg.n)
-    d, p, s, e = sssp_frontier(ops, jnp.int32(0), n=cg.n, chunk=8)
+    d_ref, p_ref, s_ref, e_ref, c_ref = sssp_frontier(ops, jnp.int32(0),
+                                                      n=cg.n)
+    d, p, s, e, c = sssp_frontier(ops, jnp.int32(0), n=cg.n, chunk=8)
     assert np.array_equal(np.asarray(d_ref), np.asarray(d))
     assert np.array_equal(np.asarray(p_ref), np.asarray(p))
     assert (int(s_ref), int(e_ref)) == (int(s), int(e))
+    assert bool(c_ref) and bool(c)
 
 
 def test_frontier_pred_tree_valid_and_matches_csr():
@@ -287,5 +289,5 @@ def test_frontier_relax_ref_matches_engine_first_sweep():
     active = dist0 < jnp.inf
     want = frontier_relax_ref(dist0, active, ops["out_ell_idx"],
                               ops["out_ell_w"])
-    d1, _, _, _ = sssp_frontier(ops, jnp.int32(0), n=n, max_sweeps=1)
+    d1, _, _, _, _ = sssp_frontier(ops, jnp.int32(0), n=n, max_sweeps=1)
     assert np.array_equal(np.asarray(want), np.asarray(d1))

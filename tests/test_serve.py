@@ -123,6 +123,8 @@ def test_registry_eviction_purges_cache_rows():
     answers = sched.tick()
     by_graph = {a.query.graph: a for a in answers}
     assert by_graph["g0"].via == "error" and by_graph["g0"].value is None
+    assert by_graph["g0"].status == "graph_gone" and not by_graph["g0"].ok
+    assert by_graph["g1"].status == "ok" and by_graph["g1"].exact
     assert np.array_equal(
         by_graph["g1"].value,
         shortest_paths(g1, 2, engine="serial").dist)
@@ -524,10 +526,10 @@ def test_target_with_delta_schedule_exact():
 def test_raw_sssp_frontier_target_counts_reduced_work():
     cg = C.random_csr_graph(400, 1200, seed=7)
     ops = frontier_operands(cg)
-    d_full, _, s_full, e_full = sssp_frontier(ops, jnp.int32(0), n=cg.n)
+    d_full, _, s_full, e_full, _ = sssp_frontier(ops, jnp.int32(0), n=cg.n)
     # a target adjacent to the source should settle in very few sweeps
     nbr = int(np.asarray(ops["out_dst"])[int(ops["out_indptr"][0])])
-    d, _, s, e = sssp_frontier(ops, jnp.int32(0), n=cg.n,
-                               target=jnp.int32(nbr))
+    d, _, s, e, _ = sssp_frontier(ops, jnp.int32(0), n=cg.n,
+                                  target=jnp.int32(nbr))
     assert d[nbr] == d_full[nbr]
     assert int(s) <= int(s_full) and int(e) <= int(e_full)

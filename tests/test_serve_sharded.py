@@ -230,6 +230,33 @@ def test_scheduler_sharded_batch_and_p2p_bitwise():
 
 
 @multidevice
+def test_sharded_evicted_graph_race_fails_typed_while_live_serves():
+    """The submit -> evict -> tick race on the SHARDED route: the evicted
+    graph's queries answer ``graph_gone`` while another shard-routed
+    graph drained in the same tick still serves bitwise-exact."""
+    pol = DispatchPolicy(shard_threshold=500)
+    reg, cache = GraphRegistry(), DistanceCache(64)
+    sched = MicroBatchScheduler(reg, cache, max_batch=8, dispatch=pol)
+    ga = C.sparse_csr_graph(1200, seed=21)
+    gb = C.sparse_csr_graph(1200, seed=22)
+    reg.register("ga", ga)
+    reg.register("gb", gb)
+    sched.submit("ga", 11)
+    sched.submit("ga", 40, 900)
+    sched.submit("gb", 17)
+    reg.evict("ga")
+    by_qid = {a.query.source: a for a in sched.tick()}
+    for s in (11, 40):
+        assert by_qid[s].status == "graph_gone" and not by_qid[s].ok
+    live = by_qid[17]
+    assert live.status == "ok" and live.exact
+    assert np.array_equal(live.value,
+                          shortest_paths(gb, 17, engine="serial").dist)
+    assert sched.sharded_batches == 1             # gb really went sharded
+    assert not cache.keys_for("ga")               # eviction purged rows
+
+
+@multidevice
 def test_scheduler_sharded_occupancy_and_bucket_padding():
     pol = DispatchPolicy(shard_threshold=100)
     reg, cache = GraphRegistry(), DistanceCache(64)
