@@ -120,6 +120,18 @@ def bench_tables(path: str) -> str:
             rows.append(f"| {p['n']} | {p['procs']} "
                         f"| {p['frontier_sharded_edges']} "
                         f"| {p['frontier_edges']} |")
+    gd = doc.get("gate_delta")
+    if gd:
+        rows += ["", f"**Gate** ({gd['rule']}): "
+                     f"{'PASS' if gd['pass'] else 'FAIL'}",
+                 "",
+                 "| corpus | n | Δ phases | frontier sweeps "
+                 "| Δ time_s | frontier time_s |",
+                 "|---|---|---|---|---|---|"]
+        for p in gd["points"]:
+            rows.append(f"| {p['corpus']} | {p['n']} | {p['delta_phases']} "
+                        f"| {p['frontier_sweeps']} | {p['delta_time_s']} "
+                        f"| {p['frontier_time_s']} |")
     return "\n".join(rows)
 
 

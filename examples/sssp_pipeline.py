@@ -16,8 +16,8 @@ import jax
 
 from repro.core import graph as G
 from repro.core._compat import make_mesh
-from repro.core.api import (CSR_ENGINES, ENGINES, SHARDED_CSR_ENGINES,
-                            shortest_paths)
+from repro.core.api import (CSR_ENGINES, DELTA_ENGINES, ENGINES,
+                            SHARDED_CSR_ENGINES, shortest_paths)
 from repro.core.serial import dijkstra_serial_np
 
 
@@ -54,12 +54,15 @@ def main():
                if engine in ("multisource", "multisource_csr")
                else args.source)
         # CSR-native engines get the sparse container directly — no dense
-        # matrix on their path at all.
-        arg_g = (cg if engine in CSR_ENGINES + SHARDED_CSR_ENGINES
-                 or engine == "multisource_csr" else g)
-        shortest_paths(arg_g, src, engine=engine, mesh=mesh)  # warmup/jit
+        # matrix on their path at all.  The Δ engines additionally thread
+        # delta="auto": the bucket width is derived per graph from the
+        # staged weight profile (core/delta_stepping.auto_delta).
+        arg_g = (cg if engine in CSR_ENGINES + DELTA_ENGINES
+                 + SHARDED_CSR_ENGINES or engine == "multisource_csr" else g)
+        kw = {"delta": "auto"} if engine in DELTA_ENGINES else {}
+        shortest_paths(arg_g, src, engine=engine, mesh=mesh, **kw)  # warm jit
         t0 = time.perf_counter()
-        res = shortest_paths(arg_g, src, engine=engine, mesh=mesh)
+        res = shortest_paths(arg_g, src, engine=engine, mesh=mesh, **kw)
         dt = time.perf_counter() - t0
         got = res.dist[0] if res.dist.ndim == 2 else res.dist
         ok = np.allclose(np.where(np.isfinite(ref), ref, 1e30),

@@ -16,6 +16,12 @@ Engines (paper §III):
     frontier           frontier-compacted sweeps, O(active out-degree)
                        per sweep (beyond-paper, core/frontier.py)
     frontier_kernel    same, Pallas candidate kernel (kernels/frontier_relax)
+    delta_stepping     true Δ-stepping: light/heavy edge split, per-bucket
+                       light pull fixpoint + one heavy push per bucket
+                       (beyond-paper, core/delta_stepping.py)
+    delta_stepping_kernel
+                       same, fused Pallas bucket-relax kernel
+                       (kernels/bucket_relax)
     multisource_csr    batched (S, n) fixpoint on CSR edges      (beyond-paper)
     bellman_csr_sharded vertex-partitioned CSR fixpoint: O(m/P) local
                        segment-min + 1 all-gather/sweep (beyond-paper,
@@ -69,6 +75,27 @@ trade-off, plus its §V "every edge, every sweep" complaint):
     edges_relaxed`` reports the measured relaxation work for all CSR-family
     engines (benchmarks/run_bench.py tracks the ratio as a perf gate).
 
+    The ``delta_stepping*`` engines are the full Δ-stepping algorithm, not
+    the frontier engine's bucket throttle: edges are split once by weight
+    at staging (light <= Δ as a padded in-ELL, heavy > Δ as an outgoing
+    CSR), each bucket's light arcs iterate to a fixpoint via a fused dense
+    PULL (no per-sweep frontier compaction at all), and each settled
+    bucket's heavy arcs are pushed exactly once.  They win where the
+    frontier engine's per-sweep ``nonzero`` compaction dominates — long-
+    diameter graphs (road-like grids: hundreds of frontier sweeps collapse
+    into a handful of bucket phases) and heavy-tailed weight mixes (hub
+    fan-outs relaxed once per bucket instead of per sweep).  They lose
+    when the light in-ELL is wide (dense or hub-in-degree-skewed graphs —
+    the pull does O(n·K_light) work per pass; ``delta_profile`` reports
+    ``routable=False`` and serve/dispatch.py keeps the frontier engine).
+    Distances stay bitwise-equal to ``serial`` for ANY positive Δ; Δ only
+    moves work between phases.  ``delta="auto"`` (also the delta engines'
+    default) picks Δ per graph from the weight distribution
+    (core/delta_stepping.auto_delta — deterministic, memoized).  For these
+    engines ``sweeps`` counts outer bucket phases and ``edges_relaxed``
+    charges every light pass at the full light arc count — honest
+    accounting for the pull's regular-but-total touch pattern.
+
     ``multisource_csr`` batches S sources over one shared edge gather per
     sweep (the sparse twin of ``multisource``): use it to amortize the
     edge-index loads when solving many sources on one sparse graph.  Like
@@ -97,7 +124,8 @@ Dense vs sparse partitioning (the sharded engines' trade-off):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import math
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -109,6 +137,8 @@ from repro.core.bellman import (predecessors_from_dist, sssp_bellman,
                                 sssp_bellman_sharded)
 from repro.core.bellman_csr import (csr_operands, predecessors_from_dist_csr,
                                     sssp_bellman_csr, sssp_multisource_csr)
+from repro.core.delta_stepping import (auto_delta, delta_operands,
+                                       sssp_delta_stepping)
 from repro.core.frontier import frontier_operands, sssp_frontier
 from repro.core.multisource import sssp_multisource, sssp_multisource_sharded
 from repro.core.serial import dijkstra_serial
@@ -125,6 +155,8 @@ ENGINES = (
     "bellman_csr_kernel",
     "frontier",
     "frontier_kernel",
+    "delta_stepping",
+    "delta_stepping_kernel",
     "multisource_csr",
     "bellman_csr_sharded",
     "frontier_sharded",
@@ -136,11 +168,17 @@ ENGINES = (
 CSR_ENGINES = ("bellman_csr", "bellman_csr_kernel",
                "frontier", "frontier_kernel")
 FRONTIER_ENGINES = ("frontier", "frontier_kernel")
+# true Δ-stepping engines (core/delta_stepping.py): light/heavy split,
+# bucketed schedule; delta= selects the bucket width ("auto" = per-graph)
+DELTA_ENGINES = ("delta_stepping", "delta_stepping_kernel")
+# every engine that consumes (rather than ignores) the delta= argument
+_DELTA_CONSUMERS = FRONTIER_ENGINES + DELTA_ENGINES
 # mesh-requiring engines on vertex-partitioned CSR blocks (core/sharded_csr)
 SHARDED_CSR_ENGINES = ("bellman_csr_sharded", "frontier_sharded",
                        "multisource_csr_sharded")
 # every engine that consumes CsrGraph input without densifying it
-_CSR_NATIVE = CSR_ENGINES + ("multisource_csr",) + SHARDED_CSR_ENGINES
+_CSR_NATIVE = (CSR_ENGINES + DELTA_ENGINES + ("multisource_csr",)
+               + SHARDED_CSR_ENGINES)
 
 
 @dataclasses.dataclass
@@ -173,15 +211,29 @@ def shortest_paths(
     axis: str = "data",
     block: int = 256,
     max_sweeps: int | None = None,
-    delta: float | None = None,
+    delta: Union[float, str, None] = None,
     target: int | None = None,
     target_lb: float | None = None,
 ) -> SsspResult:
     """Run one SSSP engine.  ``source`` is an int (or int array for
     ``multisource`` / ``multisource_csr``).  Sharded engines need a
     ``mesh``; the adjacency is padded to the mesh-axis size automatically
-    (paper §III-B.2).  ``delta`` enables the frontier engines' Δ-bucket
-    schedule (ignored elsewhere).
+    (paper §III-B.2).
+
+    ``delta`` sets the Δ-bucket width for the engines that consume it —
+    the frontier engines' bucket throttle and the ``delta_stepping*``
+    engines' light/heavy split (see the module docstring for when each
+    wins).  It must be a positive finite number or the string ``"auto"``
+    (resolve per graph via core/delta_stepping.auto_delta; for the delta
+    engines ``None`` also means auto, since they cannot run without a Δ).
+    Nonpositive, non-finite, or non-numeric values raise ``ValueError``
+    eagerly — a nonpositive Δ would make every edge heavy and the bucket
+    window empty — as does passing ``delta=`` to any engine that would
+    silently ignore it.  Note the frontier engines compile Δ in as a
+    static argument (their schedule branches on it at trace time), so
+    ``"auto"``'s per-graph values recompile per graph there; the delta
+    engines trace Δ as a runtime scalar and recompile only per graph
+    shape.
 
     ``target=`` (frontier engines only) turns the solve into a
     point-to-point query with an early exit: the fixpoint loop stops as
@@ -215,6 +267,23 @@ def shortest_paths(
         engine, mesh, axis = choice.engine, choice.mesh, choice.axis
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+    # Δ validation is EAGER (before any staging): a bad width would
+    # otherwise surface as a silently-ignored kwarg or a hung bucket loop.
+    if delta is not None:
+        if engine not in _DELTA_CONSUMERS:
+            raise ValueError(
+                f"delta= is consumed only by {_DELTA_CONSUMERS}; engine "
+                f"{engine!r} would silently ignore it")
+        if delta != "auto":
+            try:
+                delta = float(delta)
+            except (TypeError, ValueError):
+                raise ValueError(
+                    f"delta must be a positive finite number or 'auto', "
+                    f"got {delta!r}") from None
+            if not (math.isfinite(delta) and delta > 0):
+                raise ValueError(
+                    f"delta must be positive and finite, got {delta!r}")
     # target= early exit is frontier-only; frontier_sharded accepts target=
     # too but runs the FULL fixpoint (its row is a superset of the partial
     # solve, dist[target] bitwise-identical — serve caches it as complete).
@@ -287,9 +356,34 @@ def shortest_paths(
         return SsspResult(np.asarray(dist), np.asarray(pred), int(s), engine,
                           edges_relaxed=int(e), converged=bool(c))
 
+    if engine in DELTA_ENGINES:
+        if cg is None:
+            cg = g.to_csr()
+        # None and "auto" both resolve per graph: the engine cannot run
+        # without a width, and auto_delta is deterministic + memoized.
+        dval = auto_delta(cg) if delta in (None, "auto") else delta
+        operands = delta_operands(cg, dval)
+        pull_fn = None
+        if engine == "delta_stepping_kernel":
+            from repro.kernels.bucket_relax.ops import make_bucket_pull_fn
+
+            pull_fn = make_bucket_pull_fn(block_v=block)
+        d, p, s, e, c = sssp_delta_stepping(
+            operands,
+            jnp.int32(source),
+            jnp.float32(dval),
+            n=cg.n,
+            pull_fn=pull_fn,
+            max_sweeps=max_sweeps,
+        )
+        return SsspResult(np.asarray(d), np.asarray(p), int(s), engine,
+                          edges_relaxed=int(e), converged=bool(c))
+
     if engine in FRONTIER_ENGINES:
         if cg is None:
             cg = g.to_csr()
+        if delta == "auto":
+            delta = auto_delta(cg)
         use_kernel = engine == "frontier_kernel"
         operands = frontier_operands(cg, with_ell=use_kernel)
         sweep_fn = None

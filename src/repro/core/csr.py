@@ -61,6 +61,20 @@ def _build_ell(
     return _freeze(idx, w)
 
 
+def _masked_row_counts(mask: np.ndarray, indptr: np.ndarray,
+                       n: int) -> np.ndarray:
+    """Per-row count of True arcs under a per-arc ``mask``, for rows
+    delimited by ``indptr``.  ``np.add.reduceat`` mishandles empty rows
+    (it returns the element AT the boundary, and raises outright when a
+    trailing empty row's boundary equals len(mask)), so empty rows are
+    clipped and zeroed explicitly."""
+    deg = np.diff(indptr)
+    if mask.size == 0:
+        return np.zeros(n, np.int64)
+    starts = np.minimum(np.asarray(indptr[:-1], np.int64), mask.size - 1)
+    return np.where(deg > 0, np.add.reduceat(mask, starts), 0).astype(np.int64)
+
+
 @dataclasses.dataclass(frozen=True)
 class CsrGraph:
     """Incoming-edge CSR graph.
@@ -178,6 +192,52 @@ class CsrGraph:
             indptr, out_dst, out_w = self.out_csr()
             return _build_ell(indptr, out_dst, out_w, self.n, width_multiple)
         return self._memo(("_out_ell", width_multiple), build)
+
+    def light_in_ell(
+        self, delta: float, width_multiple: int = 8
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Padded-ELL view of the *light* incoming arcs (weight <= Δ):
+        (n, K_light) int32 source ids and (n, K_light) float32 weights —
+        the Δ-stepping light phase's pull operand (core/delta_stepping.py).
+
+        The split is the classic Δ-stepping light/heavy partition
+        (Meyer & Sanders; revisited by arXiv 1604.02113): light arcs can
+        re-improve labels inside the current Δ-bucket and are iterated to
+        a fixpoint, heavy arcs (weight > Δ) can only reach later buckets
+        and are relaxed once per bucket — see ``heavy_out_csr`` for the
+        other half.  K_light = max light in-degree rounded up to
+        ``width_multiple``; padding slots are the usual (0, INF)
+        sentinels.  Memoized per (Δ, width): serving solves on a pinned
+        handle pay the O(m) split once.
+        """
+        def build():
+            mask = np.asarray(self.weights) <= np.float32(delta)
+            ldeg = _masked_row_counts(mask, self.indptr, self.n)
+            lip = np.concatenate([[0], np.cumsum(ldeg)]).astype(np.int64)
+            return _build_ell(lip, self.indices[mask], self.weights[mask],
+                              self.n, width_multiple)
+        return self._memo(("_light_in_ell", float(delta), width_multiple),
+                          build)
+
+    def heavy_out_csr(
+        self, delta: float
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Outgoing-edge CSR restricted to the *heavy* arcs (weight > Δ):
+        ``(indptr, dst, w)`` with the same (src, dst) ordering as
+        ``out_csr``.  A heavy arc can never land inside the bucket it
+        leaves (its weight alone exceeds the bucket width), so Δ-stepping
+        relaxes each settled bucket's heavy out-arcs exactly once — a
+        push over this view — instead of re-touching them every inner
+        iteration.  Complement of ``light_in_ell`` (disjoint by the same
+        weight <= Δ test).  Memoized per Δ.
+        """
+        def build():
+            indptr, out_dst, out_w = self.out_csr()
+            mask = out_w > np.float32(delta)
+            hdeg = _masked_row_counts(mask, indptr, self.n)
+            hip = np.concatenate([[0], np.cumsum(hdeg)]).astype(np.int64)
+            return _freeze(hip, out_dst[mask], out_w[mask])
+        return self._memo(("_heavy_out_csr", float(delta)), build)
 
     def partitioned(self, nprocs: int, *, pad_multiple: int = 8) -> "CsrPartition":
         """1-D vertex partition of this graph across ``nprocs`` owners —
@@ -402,3 +462,22 @@ def sparse_csr_graph(n: int, *, seed: int = 0) -> CsrGraph:
     """Paper Table II corpus shape (m = 3n) in O(n) memory — usable far
     beyond the dense generator's n≈40k ceiling."""
     return random_csr_graph(n, 3 * n, seed=seed)
+
+
+def road_like_csr_graph(n: int, *, seed: int = 0) -> CsrGraph:
+    """Long-diameter grid corpus (graph.road_like_edge_list) as a CSR —
+    the Δ-stepping gate's road-network stand-in.  ``n`` rounds down to a
+    perfect square; read the actual count back from ``.n``."""
+    from repro.core.graph import road_like_edge_list
+
+    nn, e, w = road_like_edge_list(n, seed=seed)
+    return csr_from_edge_list(nn, e, w)
+
+
+def skewed_hub_csr_graph(n: int, *, seed: int = 0) -> CsrGraph:
+    """Heavy-tailed hub corpus (graph.skewed_hub_edge_list) as a CSR —
+    the Δ-stepping gate's skewed-weight stand-in."""
+    from repro.core.graph import skewed_hub_edge_list
+
+    e, w = skewed_hub_edge_list(n, seed=seed)
+    return csr_from_edge_list(n, e, w)

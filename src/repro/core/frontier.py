@@ -30,6 +30,10 @@ weighted graphs: only pending vertices with ``dist <= limit`` are expanded,
 and the limit advances by Δ when the current bucket drains — Δ-stepping
 restricted to the jit-static state (dist, pending, limit).  ``delta=None``
 (default) expands the full improved set each sweep (Bellman-Ford ordering).
+The TRUE Δ-stepping engine — light/heavy edge split, per-bucket light
+fixpoint, one heavy pass per settled bucket — lives in
+core/delta_stepping.py and reuses this module's compaction machinery
+(:func:`relax_active`, :func:`make_flat_sweep_fn`, :func:`sweep_cap`).
 
 An optional **target early exit** (``target=...``) stops the fixpoint as
 soon as ``dist[target]`` is provably final: with nonnegative weights any
@@ -252,15 +256,64 @@ def make_flat_sweep_fn(chunk: int = 1024) -> Callable:
     return sweep
 
 
-def sweep_cap(n: int, delta: float | None, max_sweeps: int | None) -> int:
+def relax_active(ops: dict, dist, active, *, n: int, sweep: Callable):
+    """Compact the ``active`` mask and relax its out-edge windows once —
+    the stream-compaction + sweep core shared by :func:`frontier_fixpoint`
+    and the Δ-stepping heavy phase (core/delta_stepping.py), so the two
+    schedules cannot drift in compaction or window arithmetic.
+
+    ``ops`` needs the sweep contract's keys (out_indptr staged with the
+    trailing sentinel row, out_dst, out_w — see :func:`frontier_operands`;
+    the Δ engine passes an aliased view of its heavy split).  Must be
+    called inside jit.  Returns ``(new_dist, E)`` with E the total
+    out-degree of the active set (the edges-relaxed increment).
+    """
+    fids = jnp.nonzero(active, size=n, fill_value=n)[0].astype(jnp.int32)
+    fcount = jnp.sum(active)
+    starts = ops["out_indptr"][fids]
+    degs = ops["out_indptr"][fids + 1] - starts
+    csum = jnp.cumsum(degs)
+    E, off = csum[-1], csum - degs
+    new = sweep(dist, fids, starts, off, E, fcount, ops)
+    return new, E
+
+
+def sweep_cap(n: int, delta: float | None, max_sweeps: int | None,
+              max_dist=None):
     """Fixpoint sweep bound shared by every frontier-family engine
     (sssp_frontier here, sssp_frontier_dynamic / sssp_repair in
-    dynamic/repair.py): the hop-diameter bound n for the plain schedule;
-    4x headroom under Δ-bucketing, whose deferred vertices re-enter later
-    buckets.  The pending-empty exit is the real stop."""
+    dynamic/repair.py, and the Δ-stepping engine's outer-phase cap): the
+    hop-diameter bound n for the plain schedule; headroom under
+    Δ-bucketing, whose deferred vertices re-enter later buckets.  The
+    pending-empty exit is the real stop — the cap is a divergence guard.
+
+    With ``max_dist`` (an upper bound on the largest finite distance,
+    e.g. (n-1)·w_max from the staged weights) the Δ headroom is derived
+    instead of guessed: the bucket limit only ever advances past the
+    current minimum pending label, so it advances at most
+    ``ceil(max_dist / Δ) + 1`` times before clearing every finite label;
+    every other sweep relaxes a nonempty active set containing the
+    minimum pending vertex, whose label is final (the Dijkstra argument),
+    so at most n such sweeps exist.  Hence
+    ``cap = n + ceil(max_dist / Δ) + 1``, with the legacy ``4·n``
+    constant kept as a floor for callers whose bound is loose or traced.
+    ``max_dist`` may be a traced scalar — the result is then traced too
+    (fine as a ``lax.while_loop`` bound); without it the legacy static
+    ``4·n`` is returned unchanged.
+    """
     if max_sweeps is not None:
         return max_sweeps
-    return n if delta is None else 4 * n
+    if delta is None:
+        return n
+    if max_dist is None:
+        return 4 * n
+    buckets = jnp.ceil(jnp.asarray(max_dist, jnp.float32)
+                       / jnp.float32(delta)) + 1.0
+    # non-finite or huge bounds (disconnected staging, f32 overflow) would
+    # wrap int32: clamp the bucket count, the floor still applies.
+    buckets = jnp.where(jnp.isfinite(buckets), buckets, 2.0 ** 30)
+    buckets = jnp.clip(buckets, 0.0, 2.0 ** 30).astype(jnp.int32)
+    return jnp.maximum(jnp.int32(4 * n), jnp.int32(n) + buckets)
 
 
 def frontier_fixpoint(
@@ -325,13 +378,7 @@ def frontier_fixpoint(
             nxt = jnp.min(jnp.where(pending, dist, INF)) + delta
             limit = jnp.where(has, limit, nxt)
             active = pending & (dist <= limit)
-        fids = jnp.nonzero(active, size=n, fill_value=n)[0].astype(jnp.int32)
-        fcount = jnp.sum(active)
-        starts = ops["out_indptr"][fids]
-        degs = ops["out_indptr"][fids + 1] - starts
-        csum = jnp.cumsum(degs)
-        E, off = csum[-1], csum - degs
-        new = sweep(dist, fids, starts, off, E, fcount, ops)
+        new, E = relax_active(ops, dist, active, n=n, sweep=sweep)
         improved = new < dist
         pending = (pending & ~active) | improved
         return new, pending, limit, it + 1, edges + E

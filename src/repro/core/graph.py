@@ -11,6 +11,7 @@ Unreachable entries are ``INF`` (the paper's ∞); diagonal is 0.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional
 
 import numpy as np
@@ -151,6 +152,72 @@ def random_edge_list(
     e = np.concatenate(edges, axis=0) if edges else np.zeros((0, 2), np.int64)
     w = rng.uniform(1.0, max_weight, size=len(e))
     return e, w
+
+
+def road_like_edge_list(
+    n: int,
+    *,
+    seed: int = 0,
+    max_weight: float = 100.0,
+) -> tuple[int, np.ndarray, np.ndarray]:
+    """Road-network-like corpus: a ``side × side`` 4-neighbour grid
+    (side = isqrt(n)) with uniform(1, max_weight) weights.  Returns
+    ``(n_actual, edges, weights)`` — n is rounded DOWN to side² so the
+    grid is exact.
+
+    This is the long-diameter shape the frontier engine's docstring
+    promises it wins on, and the Δ-stepping gate corpus
+    (benchmarks/run_bench.py ``gate_delta``): shortest paths are
+    O(side) hops deep, so the per-sweep frontier compaction overhead is
+    paid O(side) times while the Δ engine's dense pull touches the whole
+    light ELL in a handful of fused passes.
+    """
+    side = math.isqrt(n)
+    rng = np.random.default_rng(seed)
+    idx = np.arange(side * side).reshape(side, side)
+    u = np.concatenate([idx[:, :-1].ravel(), idx[:-1, :].ravel()])
+    v = np.concatenate([idx[:, 1:].ravel(), idx[1:, :].ravel()])
+    e = np.stack([u, v], axis=1)
+    w = rng.uniform(1.0, max_weight, size=len(e))
+    return side * side, e, w
+
+
+def skewed_hub_edge_list(
+    n: int,
+    *,
+    seed: int = 0,
+    hubs: int = 16,
+    spokes: int = 512,
+    max_weight: float = 100.0,
+    heavy_lo: float = 150.0,
+    heavy_hi: float = 1500.0,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Skewed-hub corpus: a connected light base (spanning path + 2n
+    random edges, weights uniform(1, max_weight)) plus ``hubs`` vertices
+    that each fan out ``spokes`` HEAVY edges (weights uniform(heavy_lo,
+    heavy_hi)).  The heavy-tailed weight mix is the Δ-stepping showcase:
+    with Δ between the light and heavy ranges the hub fan-outs are
+    relaxed once per bucket instead of rippling through every sweep,
+    while the plain frontier engine re-touches the hub windows every
+    time any spoke endpoint improves.
+    """
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    pe = np.stack([perm[:-1], perm[1:]], axis=1)
+    m_base = 2 * n
+    bu = rng.integers(0, n, size=m_base + 32)
+    bv = rng.integers(0, n, size=m_base + 32)
+    keep = bu != bv
+    be = np.stack([bu[keep], bv[keep]], axis=1)[:m_base]
+    e = np.concatenate([pe, be])
+    w = rng.uniform(1.0, max_weight, size=len(e))
+    hub_ids = rng.choice(n, size=min(hubs, n), replace=False)
+    hu = np.repeat(hub_ids, spokes)
+    hv = rng.integers(0, n, size=len(hub_ids) * spokes)
+    keep = hu != hv
+    he = np.stack([hu[keep], hv[keep]], axis=1)
+    hw = rng.uniform(heavy_lo, heavy_hi, size=len(he))
+    return np.concatenate([e, he]), np.concatenate([w, hw])
 
 
 def random_graph(

@@ -1,0 +1,10 @@
+from repro.kernels.bucket_relax.ops import (bucket_relax_block,
+                                            make_bucket_pull_fn)
+from repro.kernels.bucket_relax.ref import bucket_cand_ref, bucket_relax_ref
+
+__all__ = [
+    "bucket_relax_block",
+    "make_bucket_pull_fn",
+    "bucket_cand_ref",
+    "bucket_relax_ref",
+]

@@ -1,0 +1,112 @@
+"""Fused Pallas TPU kernel for the Δ-stepping light-bucket pull.
+
+The Δ engine's inner loop (core/delta_stepping.py) runs, per pass,
+
+    new[v] = min(dist[v], min_k(dist[light_ell_idx[v, k]] + light_ell_w[v, k]))
+    go     = any((new < dist) & (new < hi))
+
+over the padded light in-ELL.  The plain ELL kernel (kernels/csr_relax)
+covers only the candidate min; this kernel fuses all three steps — gather +
+row-min, the self-distance fold, and the in-bucket improvement flag that
+drives the inner ``lax.while_loop`` — so one pass through VMEM produces
+both the new distance block and the loop-control bit, nothing re-streamed.
+
+Grid is (V//bv, K//bk) with K as the *last* axis: for a fixed v-block the
+k-steps run sequentially on the core and accumulate with min — race-free by
+construction, same as csr_relax.  The dist vector stays fully resident in
+VMEM as a (1, n) block; each v-block's own distances are sliced out of it
+at the final k-step (no second dist operand), the bucket limit ``hi`` rides
+along as a (1, 1) block.  Per-block improvement flags are OR-reduced by the
+caller — elementwise comparisons are exact, so flag-from-kernel equals
+flag-from-XLA and the engine's schedule is bitwise-unchanged.
+
+Validated in interpret mode on CPU against ref.py; on real TPU the row
+gather lowers to Mosaic's dynamic-gather path, the regular-access pattern
+the ELL layout exists for.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _bucket_relax_kernel(dist_ref, idx_ref, w_ref, hi_ref, out_ref,
+                         flag_ref):
+    """Grid (V//bv, K//bk).  dist_ref: (1, V) full vector; idx/w: (bv, bk);
+    hi_ref: (1, 1); out: (1, bv) min-accumulated across the sequential
+    k-steps then folded with the block's own distances at the last step;
+    flag: (1, 1) int32, 1 iff any row of this v-block improved below hi."""
+    k_step = pl.program_id(1)
+    v_step = pl.program_id(0)
+    k_last = pl.num_programs(1) - 1
+
+    @pl.when(k_step == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, jnp.inf)
+
+    d = dist_ref[...][0]                                     # (V,)
+    cand = jnp.min(d[idx_ref[...]] + w_ref[...], axis=1)     # (bv,)
+    out_ref[...] = jnp.minimum(out_ref[...], cand[None, :])
+
+    @pl.when(k_step == k_last)
+    def _finish():
+        bv = out_ref.shape[1]
+        old = lax.dynamic_slice(d, (v_step * bv,), (bv,))
+        new = jnp.minimum(old, out_ref[...][0])
+        out_ref[...] = new[None, :]
+        imp = (new < old) & (new < hi_ref[0, 0])
+        flag_ref[...] = jnp.any(imp).astype(jnp.int32).reshape(1, 1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_v", "block_k", "interpret")
+)
+def bucket_relax(
+    dist: jax.Array,
+    ell_idx: jax.Array,
+    ell_w: jax.Array,
+    hi: jax.Array,
+    *,
+    block_v: int = 256,
+    block_k: int | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused light-bucket pull pass.  Requires V % block_v == 0 and
+    K % block_k == 0 (ops.py pads to the grid; padded rows carry INF
+    distances and (0, INF) ELL slots, so they neither improve nor flag).
+
+    dist (V,), ell_idx (V, K), ell_w (V, K), hi f32 scalar ->
+    (new_dist (V,), flags (V // block_v,) int32).
+    """
+    V = dist.shape[0]
+    K = ell_idx.shape[1]
+    if block_k is None:
+        block_k = K
+    assert ell_idx.shape == (V, K) and ell_w.shape == (V, K)
+    assert V % block_v == 0 and K % block_k == 0, (V, K, block_v, block_k)
+    grid = (V // block_v, K // block_k)
+    out, flags = pl.pallas_call(
+        _bucket_relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, V), lambda v, k: (0, 0)),           # full dist
+            pl.BlockSpec((block_v, block_k), lambda v, k: (v, k)),
+            pl.BlockSpec((block_v, block_k), lambda v, k: (v, k)),
+            pl.BlockSpec((1, 1), lambda v, k: (0, 0)),           # hi
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_v), lambda v, k: (0, v)),
+            pl.BlockSpec((1, 1), lambda v, k: (0, v)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, V), dist.dtype),
+            jax.ShapeDtypeStruct((1, grid[0]), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dist[None, :], ell_idx, ell_w,
+      jnp.asarray(hi, dist.dtype).reshape(1, 1))
+    return out[0], flags[0]

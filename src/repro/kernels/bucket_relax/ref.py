@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the bucket_relax Pallas kernel.
+
+The light pull is gathers + adds + mins over f32 — exact operations — so
+the kernel must agree with these *bitwise*, and the Δ-stepping engine
+assembled from the kernel must agree bitwise with the flat pull in
+core/delta_stepping.py (same candidate multiset; the per-block improvement
+flags OR-reduce to the same global boolean).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_cand_ref(dist: jnp.ndarray, ell_idx: jnp.ndarray,
+                    ell_w: jnp.ndarray) -> jnp.ndarray:
+    """Row-min candidate the kernel accumulates: (n,), (n, K), (n, K) ->
+    (n,).  cand[v] = min_k(dist[ell_idx[v, k]] + ell_w[v, k]); padding
+    slots (0, INF) contribute INF and never win."""
+    return jnp.min(dist[ell_idx] + ell_w, axis=1)
+
+
+def bucket_relax_ref(dist: jnp.ndarray, ell_idx: jnp.ndarray,
+                     ell_w: jnp.ndarray, hi) -> tuple[jnp.ndarray,
+                                                      jnp.ndarray]:
+    """The full fused pass: ``(new_dist, go)`` with ``new = min(dist,
+    cand)`` and ``go = any((new < dist) & (new < hi))`` — exactly the
+    engine's inner-loop step + control bit (the pull contract of
+    core/delta_stepping.make_light_pull_fn)."""
+    new = jnp.minimum(dist, bucket_cand_ref(dist, ell_idx, ell_w))
+    return new, jnp.any((new < dist) & (new < jnp.asarray(hi, dist.dtype)))

@@ -13,6 +13,8 @@ if "--procs" in sys.argv:
         --engine bellman_kernel --nodes 2000 --edges 6000
     PYTHONPATH=src python -m repro.launch.sssp_run \
         --engine dijkstra_sharded --procs 8 --nodes 4000 --edges 12000
+    PYTHONPATH=src python -m repro.launch.sssp_run \
+        --engine delta_stepping --corpus road --nodes 10000 --delta auto
 
 Timing follows the paper's §III cost envelope: graph construction (edge
 list -> adjacency matrix) is excluded; device transfer + algorithm + result
@@ -31,10 +33,22 @@ def main(argv=None):
                              "bellman_kernel", "bellman_sharded",
                              "multisource", "bellman_csr",
                              "bellman_csr_kernel", "frontier",
-                             "frontier_kernel", "multisource_csr",
+                             "frontier_kernel", "delta_stepping",
+                             "delta_stepping_kernel", "multisource_csr",
                              "bellman_csr_sharded", "frontier_sharded"])
     ap.add_argument("--nodes", type=int, default=1000)
     ap.add_argument("--edges", type=int, default=3000)
+    ap.add_argument("--delta", default=None,
+                    help="Δ bucket width: a positive float or 'auto' "
+                         "(per-graph width from the weight profile).  "
+                         "Consumed by the frontier and delta_stepping "
+                         "engines; the Δ engines default to auto.")
+    ap.add_argument("--corpus", default="random",
+                    choices=["random", "road", "hub"],
+                    help="graph shape: 'road' (4-neighbour grid, --nodes "
+                         "rounded down to a square) and 'hub' (heavy-"
+                         "tailed hub fan-outs) are the Δ-stepping gate "
+                         "corpora; CSR-native engines only")
     ap.add_argument("--procs", type=int, default=1)
     ap.add_argument("--source", type=int, default=0)
     ap.add_argument("--sources", type=int, default=8,
@@ -49,11 +63,22 @@ def main(argv=None):
     from repro.core import csr as C
     from repro.core import graph as G
     from repro.core._compat import make_mesh
-    from repro.core.api import SHARDED_CSR_ENGINES, shortest_paths
+    from repro.core.api import (DELTA_ENGINES, SHARDED_CSR_ENGINES,
+                                shortest_paths)
     from repro.core.serial import dijkstra_serial_np
 
-    csr_native = args.engine in SHARDED_CSR_ENGINES
-    if csr_native:
+    csr_native = args.engine in SHARDED_CSR_ENGINES + DELTA_ENGINES
+    if args.corpus != "random":
+        if not (csr_native or args.engine in
+                ("bellman_csr", "bellman_csr_kernel", "frontier",
+                 "frontier_kernel", "multisource_csr")):
+            ap.error(f"--corpus {args.corpus} builds a CsrGraph; "
+                     f"engine {args.engine!r} needs the dense corpus")
+        make = (C.road_like_csr_graph if args.corpus == "road"
+                else C.skewed_hub_csr_graph)
+        g = make(args.nodes, seed=args.seed)
+        csr_native = True
+    elif csr_native:
         # --procs for the CSR engines: same flag, sparse partition — no
         # dense matrix is ever built, so n can go far beyond the dense cap.
         g = C.random_csr_graph(args.nodes, args.edges, seed=args.seed,
@@ -61,6 +86,9 @@ def main(argv=None):
     else:
         g = G.random_graph(args.nodes, args.edges, seed=args.seed,
                            directed=args.directed)
+    delta = args.delta
+    if delta is not None and delta != "auto":
+        delta = float(delta)   # api re-validates (positive, finite)
     mesh = None
     if args.engine in ("dijkstra_sharded", "bellman_sharded",
                        "multisource") + SHARDED_CSR_ENGINES:
@@ -70,14 +98,16 @@ def main(argv=None):
               if args.engine in ("multisource", "multisource_csr")
               else args.source)
 
+    kw = {} if delta is None else {"delta": delta}
     times = []
     res = None
     for rep in range(args.repeats):
         t0 = time.perf_counter()
-        res = shortest_paths(g, source, engine=args.engine, mesh=mesh)
+        res = shortest_paths(g, source, engine=args.engine, mesh=mesh, **kw)
         times.append(time.perf_counter() - t0)
     best = min(times)
-    print(f"engine={args.engine} n={args.nodes} m={args.edges} "
+    n, m = g.n, (g.nnz if csr_native else args.edges)
+    print(f"engine={args.engine} corpus={args.corpus} n={n} m={m} "
           f"procs={args.procs} time={best:.6f}s"
           + (f" sweeps={res.sweeps}" if res.sweeps is not None else "")
           + (f" edges_relaxed={res.edges_relaxed}"

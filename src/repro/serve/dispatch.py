@@ -13,7 +13,11 @@ the per-rank block is big enough to hide the exchange (its Table III
 speedups start at the largest graphs), so small graphs stay on the
 single-device engines and only graphs with ``n >= shard_threshold``
 route to the partitioned ones — and only when the runtime actually has
-multiple devices to partition across.  Dynamic graphs (PR 5 overlays)
+multiple devices to partition across.  Below the shard crossover, large
+single-source solves on static CSR graphs route to the Δ-stepping
+engine (core/delta_stepping.py) when the graph's weight profile keeps
+its light in-ELL narrow — ``delta_threshold`` / ``would_delta`` gate
+this, and the answers stay bitwise-identical either way.  Dynamic graphs (PR 5 overlays)
 never shard: their serving path relies on overlay-native operands and
 incremental repair, both of which are built on the single-device staged
 views (a frozen CsrPartition would go stale at the first mutation).
@@ -39,6 +43,14 @@ import numpy as np
 # emulated host mesh (benchmarks/serve_bench.py gates the >= side at 4
 # devices); operators override per deployment via DispatchPolicy.
 DEFAULT_SHARD_THRESHOLD = 20000
+
+# vertex count from which single-device single-source solves try the
+# Δ-stepping engine: below it the frontier engine's per-sweep compaction
+# is cheap enough that the Δ split/staging isn't worth it (the
+# benchmarks/run_bench.py gate_delta corpora sit well above).  Routing
+# additionally requires the graph's delta_profile to be routable (narrow
+# light in-ELL) — see DispatchPolicy.would_delta.
+DEFAULT_DELTA_THRESHOLD = 4096
 
 # query kinds the scheduler distinguishes (scheduler.tick's two solve
 # paths plus api's one-shot single-source case).
@@ -77,13 +89,19 @@ class DispatchPolicy:
     nprocs: devices to partition across; default = every visible device.
         Clamped to the visible count; 1 also disables sharding.
     axis: mesh axis name (matches the sharded engines' default).
+    delta_threshold: vertex count at which non-sharded single-source
+        solves on static CsrGraphs route to the Δ-stepping engine
+        (inclusive), when the graph's weight profile supports it.
+        ``None`` disables Δ routing.
     """
 
     def __init__(self, *, shard_threshold: int | None = DEFAULT_SHARD_THRESHOLD,
-                 nprocs: int | None = None, axis: str = "data"):
+                 nprocs: int | None = None, axis: str = "data",
+                 delta_threshold: int | None = DEFAULT_DELTA_THRESHOLD):
         avail = len(jax.devices())
         self.nprocs = avail if nprocs is None else min(int(nprocs), avail)
         self.shard_threshold = shard_threshold
+        self.delta_threshold = delta_threshold
         self.axis = axis
 
     # engine per (family, kind); p2p stays on frontier single-device for
@@ -105,6 +123,27 @@ class DispatchPolicy:
                 and self.nprocs > 1
                 and n >= self.shard_threshold)
 
+    def would_delta(self, g, n: int, *, dynamic: bool = False) -> bool:
+        """Whether a non-sharded single-source solve of ``g`` should use
+        the Δ-stepping engine: a static (non-dynamic) CsrGraph at or
+        above ``delta_threshold`` whose weight distribution yields a
+        narrow light in-ELL (``delta_profile(g)["routable"]`` — dense or
+        hub-in-degree-skewed graphs stay on the frontier engine, whose
+        compacted push doesn't pay the pull's O(n·K_light) pass).  The
+        profile is memoized on the graph, so repeat routing of a pinned
+        handle is a dict lookup.  Only graphs that actually carry CSR
+        arrays qualify — dense arrays / Graph inputs keep the frontier
+        engine rather than paying a host-side conversion just to route.
+        """
+        if (dynamic or self.delta_threshold is None
+                or n < self.delta_threshold):
+            return False
+        if getattr(g, "indptr", None) is None:      # not CSR-backed
+            return False
+        from repro.core.delta_stepping import delta_profile
+
+        return bool(delta_profile(g)["routable"])
+
     def choose(self, g, *, kind: str = "single") -> EngineChoice:
         """Route one solve.  ``g`` is anything with an ``n`` (CsrGraph,
         Graph, DynamicGraph, GraphHandle-like) or a dense square array;
@@ -122,6 +161,10 @@ class DispatchPolicy:
             return EngineChoice(self._SHARDED[kind],
                                 serving_mesh(self.nprocs, self.axis),
                                 self.axis, self.nprocs)
+        # kind="single" only (batch wants the shared-gather multisource
+        # engine, p2p the target= early exit the Δ engine doesn't have).
+        if kind == "single" and self.would_delta(g, int(n), dynamic=dynamic):
+            return EngineChoice("delta_stepping", None, self.axis, 1)
         return EngineChoice(self._SINGLE[kind], None, self.axis, 1)
 
 

@@ -1,0 +1,277 @@
+"""Δ-stepping engine correctness + the PR's perf claims as invariants.
+
+Pins down: both delta engines agree with the independent heap oracle and
+bitwise with ``serial`` (same f32 path-sum minima) for any positive Δ;
+the fused Pallas kernel matches the interpreted reference bitwise; the
+light/heavy split views partition the arc set exactly; auto-Δ is
+deterministic; on the gate corpora (road-like grid, skewed hub) the
+bucket schedule takes strictly fewer phases than the frontier engine
+takes sweeps; and the api/dispatch seams validate and route as
+documented.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import dijkstra_oracle, finite_close
+from repro.core import csr as C
+from repro.core import graph as G
+from repro.core.api import shortest_paths
+from repro.core.delta_stepping import (auto_delta, delta_operands,
+                                       delta_profile, make_light_pull_fn,
+                                       sssp_delta_stepping)
+from repro.core.frontier import frontier_operands, sssp_frontier, sweep_cap
+from repro.kernels.bucket_relax import (bucket_relax_block, bucket_relax_ref,
+                                        make_bucket_pull_fn)
+
+DELTA = ("delta_stepping", "delta_stepping_kernel")
+
+
+def _skewed_hub_small(n=120, spokes=100):
+    hub = np.stack([np.zeros(spokes, np.int64),
+                    np.arange(1, spokes + 1)], 1)
+    path = np.stack([np.arange(n - 1), np.arange(1, n)], 1)
+    edges = np.concatenate([hub, path])
+    return G.csr_from_edge_list(n, edges,
+                               np.arange(1.0, len(edges) + 1.0))
+
+
+def _cases():
+    return [
+        pytest.param(G.random_graph(50, 1225, seed=1), id="dense50"),
+        pytest.param(G.random_graph(100, 300, seed=2), id="sparse100"),
+        pytest.param(G.random_graph(60, 240, seed=3, directed=True),
+                     id="directed60"),
+        pytest.param(G.random_graph(50, 60, seed=4, connected=False),
+                     id="disconnected50"),
+        pytest.param(_skewed_hub_small(), id="skewed-hub"),
+        pytest.param(G.from_edge_list(1, np.zeros((0, 2), np.int64),
+                                      np.zeros(0)), id="single-vertex"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# oracle + bitwise-vs-serial, auto and explicit Δ
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", DELTA)
+@pytest.mark.parametrize("g", _cases())
+def test_delta_matches_oracle_and_serial(engine, g):
+    ref = shortest_paths(g, 0, engine="serial")
+    r = shortest_paths(g, 0, engine=engine)        # delta=None -> auto
+    assert finite_close(r.dist, dijkstra_oracle(g, 0))
+    assert np.array_equal(r.dist, ref.dist)
+    assert np.array_equal(r.pred, ref.pred)
+    assert r.converged
+    assert r.edges_relaxed is not None and r.sweeps is not None
+
+
+@pytest.mark.parametrize("delta", [0.5, 37.0, 1e6])
+def test_delta_any_width_bitwise(delta):
+    # Δ below every weight (all arcs heavy), mid-range, and above every
+    # path length (single all-light bucket) — distances must not move.
+    cg = C.random_csr_graph(200, 800, seed=7)
+    ref = shortest_paths(cg, 0, engine="serial")
+    for engine in DELTA:
+        r = shortest_paths(cg, 0, engine=engine, delta=delta)
+        assert np.array_equal(r.dist, ref.dist), (engine, delta)
+        assert r.converged
+
+
+def test_delta_degenerate_widths():
+    cg = C.random_csr_graph(150, 600, seed=8)
+    ref = shortest_paths(cg, 0, engine="serial")
+    # Δ >= max finite distance: one bucket, pure pull-Jacobi.
+    big = shortest_paths(cg, 0, engine="delta_stepping", delta=1e7)
+    assert np.array_equal(big.dist, ref.dist)
+    assert big.sweeps == 1
+    # Δ below the minimum weight: every arc heavy, empty light ELL — the
+    # schedule degrades to bucket-by-bucket heavy pushes and must still
+    # terminate at the exact fixpoint.
+    allh = shortest_paths(cg, 0, engine="delta_stepping", delta=0.25)
+    assert np.array_equal(allh.dist, ref.dist)
+    assert allh.sweeps > big.sweeps
+
+
+def test_delta_zero_weight_and_equal_weight_edges():
+    # zero-weight arcs are light for every Δ; all-weights-equal-to-Δ puts
+    # every arc exactly on the light boundary (w <= Δ inclusive).
+    n = 60
+    path = np.stack([np.arange(n - 1), np.arange(1, n)], 1)
+    w = np.ones(n - 1)
+    w[::7] = 0.0
+    cg = G.csr_from_edge_list(n, path, w)
+    ref = shortest_paths(cg, 0, engine="serial")
+    for engine in DELTA:
+        r = shortest_paths(cg, 0, engine=engine, delta=1.0)
+        assert np.array_equal(r.dist, ref.dist), engine
+    eq = G.csr_from_edge_list(n, path, np.full(n - 1, 5.0))
+    ref = shortest_paths(eq, 0, engine="serial")
+    for engine in DELTA:
+        r = shortest_paths(eq, 0, engine=engine, delta=5.0)
+        assert np.array_equal(r.dist, ref.dist), engine
+        assert r.converged
+
+
+# ---------------------------------------------------------------------------
+# the light/heavy split views
+# ---------------------------------------------------------------------------
+
+def test_split_views_partition_arcs():
+    cg = C.skewed_hub_csr_graph(300, seed=5)
+    delta = 120.0
+    l_idx, l_w = cg.light_in_ell(delta)
+    hip, h_dst, h_w = cg.heavy_out_csr(delta)
+    m_light = int(np.isfinite(np.asarray(l_w)).sum())
+    assert m_light + h_dst.shape[0] == cg.nnz       # exact partition
+    finite = np.asarray(l_w)[np.isfinite(np.asarray(l_w))]
+    assert (finite <= delta).all()
+    assert (np.asarray(h_w) > delta).all()
+    assert hip[-1] == h_dst.shape[0]
+    # memoized: second call returns the same frozen objects
+    assert cg.light_in_ell(delta)[0] is l_idx
+    assert cg.heavy_out_csr(delta)[1] is h_dst
+    assert not l_idx.flags.writeable and not h_w.flags.writeable
+
+
+def test_auto_delta_deterministic():
+    a = C.road_like_csr_graph(2500, seed=3)
+    b = C.road_like_csr_graph(2500, seed=3)        # fresh object, same graph
+    assert auto_delta(a) == auto_delta(b)
+    prof = delta_profile(a)
+    assert set(prof) == {"delta", "light_max_deg", "k_cap", "routable"}
+    assert prof["routable"]                         # grids stay narrow
+    assert prof["delta"] == auto_delta(a)
+    # memoized on the instance
+    assert delta_profile(a) is prof
+
+
+# ---------------------------------------------------------------------------
+# fused kernel vs interpreted reference (bitwise)
+# ---------------------------------------------------------------------------
+
+def test_bucket_relax_kernel_matches_ref():
+    cg = C.skewed_hub_csr_graph(500, seed=2)
+    ops = delta_operands(cg, auto_delta(cg))
+    key = jax.random.PRNGKey(0)
+    dist = jnp.where(jax.random.uniform(key, (cg.n,)) < 0.3,
+                     jax.random.uniform(jax.random.PRNGKey(1),
+                                        (cg.n,)) * 300.0,
+                     jnp.inf).astype(jnp.float32)
+    for hi in (0.0, 150.0, np.inf):
+        nk, gk = bucket_relax_block(dist, ops["light_ell_idx"],
+                                    ops["light_ell_w"], jnp.float32(hi))
+        nr, gr = bucket_relax_ref(dist, ops["light_ell_idx"],
+                                  ops["light_ell_w"], hi)
+        assert np.array_equal(np.asarray(nk), np.asarray(nr),
+                              equal_nan=True), hi
+        assert bool(gk) == bool(gr), hi
+
+
+def test_kernel_engine_bitwise_equals_flat():
+    cg = C.road_like_csr_graph(1024, seed=6)
+    d = auto_delta(cg)
+    ops = delta_operands(cg, d)
+    flat = sssp_delta_stepping(ops, jnp.int32(0), jnp.float32(d), n=cg.n,
+                               pull_fn=make_light_pull_fn())
+    kern = sssp_delta_stepping(ops, jnp.int32(0), jnp.float32(d), n=cg.n,
+                               pull_fn=make_bucket_pull_fn())
+    for a, b in zip(flat, kern):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# the perf claim: strictly fewer phases than frontier sweeps (gate corpora)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make", [
+    pytest.param(lambda: C.road_like_csr_graph(10000, seed=1), id="road10k"),
+    pytest.param(lambda: C.skewed_hub_csr_graph(10000, seed=1), id="hub10k"),
+])
+def test_fewer_phases_than_frontier_sweeps(make):
+    cg = make()
+    fops = frontier_operands(cg)
+    df, _, sf, ef, cf = sssp_frontier(fops, jnp.int32(0), n=cg.n)
+    d = auto_delta(cg)
+    assert delta_profile(cg)["routable"]
+    ops = delta_operands(cg, d)
+    dd, _, ph, ed, cd = sssp_delta_stepping(ops, jnp.int32(0),
+                                            jnp.float32(d), n=cg.n)
+    assert bool(cf) and bool(cd)
+    assert np.array_equal(np.asarray(df), np.asarray(dd))   # bitwise, 10k
+    assert finite_close(np.asarray(dd), dijkstra_oracle(cg, 0))
+    assert int(ph) < int(sf), (int(ph), int(sf))
+
+
+# ---------------------------------------------------------------------------
+# sweep_cap derivation
+# ---------------------------------------------------------------------------
+
+def test_sweep_cap_derived_bound():
+    assert sweep_cap(100, None, None) == 100
+    assert sweep_cap(100, 5.0, None) == 400          # legacy Δ fallback
+    assert sweep_cap(100, 5.0, 7) == 7
+    # derived: n + ceil(max_dist/Δ) + 1, floored at the legacy 4n
+    tight = int(sweep_cap(100, 5.0, None, max_dist=50.0))
+    assert tight == 400                              # floor binds
+    loose = int(sweep_cap(100, 0.5, None, max_dist=1e4))
+    assert loose == 100 + 20000 + 1                  # derivation binds
+    # non-finite bound clamps instead of wrapping int32
+    assert int(sweep_cap(100, 0.5, None, max_dist=np.inf)) >= 400
+
+
+# ---------------------------------------------------------------------------
+# api validation + dispatch routing
+# ---------------------------------------------------------------------------
+
+def test_api_delta_validation():
+    cg = C.random_csr_graph(50, 150, seed=1)
+    for bad in (0.0, -3, np.inf, np.nan, "wide"):
+        with pytest.raises(ValueError):
+            shortest_paths(cg, 0, engine="delta_stepping", delta=bad)
+        with pytest.raises(ValueError):
+            shortest_paths(cg, 0, engine="frontier", delta=bad)
+    # engines that would silently ignore delta= must reject it
+    for engine in ("serial", "bellman", "bellman_csr", "multisource_csr"):
+        with pytest.raises(ValueError, match="delta"):
+            shortest_paths(cg, 0, engine=engine, delta=1.0)
+    # target= early exit is frontier-only
+    with pytest.raises(ValueError, match="target"):
+        shortest_paths(cg, 0, engine="delta_stepping", target=5)
+
+
+def test_dispatch_routes_delta():
+    from repro.serve.dispatch import DispatchPolicy
+
+    pol = DispatchPolicy(shard_threshold=None, delta_threshold=1000)
+    road = C.road_like_csr_graph(2500, seed=2)
+    choice = pol.choose(road, kind="single")
+    assert choice.engine == "delta_stepping" and not choice.sharded
+    # batch / p2p kinds keep their engines (batched gather / target exit)
+    assert pol.choose(road, kind="batch").engine == "multisource_csr"
+    assert pol.choose(road, kind="p2p").engine == "frontier"
+    # below the threshold, or non-CSR input: frontier as before
+    small = C.random_csr_graph(100, 300, seed=3)
+    assert pol.choose(small, kind="single").engine == "frontier"
+    assert pol.choose(np.zeros((50, 50)), kind="single").engine == "frontier"
+    # Δ routing off
+    off = DispatchPolicy(shard_threshold=None, delta_threshold=None)
+    assert off.choose(road, kind="single").engine == "frontier"
+
+
+def test_engine_auto_delta_route_bitwise():
+    from repro.serve.dispatch import DispatchPolicy, set_default_policy
+
+    road = C.road_like_csr_graph(2500, seed=4)
+    set_default_policy(DispatchPolicy(shard_threshold=None,
+                                      delta_threshold=1000))
+    try:
+        r = shortest_paths(road, 0, engine="auto")
+        assert r.engine == "delta_stepping"
+    finally:
+        set_default_policy(None)
+    ref = shortest_paths(road, 0, engine="frontier")
+    assert np.array_equal(r.dist, ref.dist)
+    assert np.array_equal(r.pred, ref.pred)
