@@ -97,6 +97,22 @@ def run_batch_size(n: int, B: int, seed: int) -> dict:
             e_rep.append(res.edges_relaxed)
             e_full.append(full.edges_relaxed)
             cones.append(stats.cone)
+            from repro.obs import get_cost_log
+            cl = get_cost_log()
+            if cl.enabled:
+                # the dynamic engines bypass core.api's shim — emit the
+                # measured rounds directly (one repair + one full solve)
+                m_live = int(dyn.nnz_live)
+                cl.emit(engine="repair", n=n, m=m_live,
+                        sweeps=res.sweeps or 0,
+                        edges_relaxed=res.edges_relaxed or 0,
+                        wall_ms=dt_rep * 1e3,
+                        converged=res.converged is not False, batch=B)
+                cl.emit(engine="frontier_dynamic", n=n, m=m_live,
+                        sweeps=full.sweeps or 0,
+                        edges_relaxed=full.edges_relaxed or 0,
+                        wall_ms=dt_full * 1e3,
+                        converged=full.converged is not False, batch=B)
     med = lambda xs: float(np.median(xs))
     rec = {
         "n": n, "m": 3 * n, "batch_edges": B, "rounds": ROUNDS,
@@ -117,7 +133,13 @@ def run_batch_size(n: int, B: int, seed: int) -> dict:
     return rec
 
 
-def run(smoke: bool = False, out: str = DEFAULT_OUT) -> str:
+def run(smoke: bool = False, out: str = DEFAULT_OUT,
+        cost_out=None) -> str:
+    cost_log = None
+    if cost_out:
+        from repro.obs import CostLog, set_cost_log
+        cost_log = CostLog()
+        set_cost_log(cost_log)
     n = 1000 if smoke else 10000
     records = [run_batch_size(n, B, seed=n + B) for B in BATCH_SIZES]
     min_ratio = 2.0 if n >= 10000 else 1.2
@@ -162,6 +184,15 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT) -> str:
         json.dump(doc, f, indent=1)
         f.write("\n")
     print(f"\nwrote {len(records)} batch-size records to {out}")
+    if cost_log is not None:
+        from repro.obs import set_cost_log
+        from repro.obs.validate import validate_cost_records
+        set_cost_log(None)
+        errs = validate_cost_records([r.to_dict() for r in cost_log.records])
+        if errs:
+            raise SystemExit(f"cost records invalid: {errs[:5]}")
+        cost_log.write_jsonl(cost_out)
+        print(f"wrote {len(cost_log.records)} cost records to {cost_out}")
     print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
     if not gate["pass"]:
         raise SystemExit("dynamic repair gate failed")
@@ -173,5 +204,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized corpus (n=1000)")
     ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--cost-out", default=None, metavar="PATH",
+                    help="write per-round repair/full cost records as "
+                         "JSONL (repro/obs/profile.py schema)")
     args = ap.parse_args()
-    run(args.smoke, out=args.out)
+    run(args.smoke, out=args.out, cost_out=args.cost_out)

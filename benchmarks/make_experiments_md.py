@@ -222,6 +222,27 @@ def serve_table(path: str) -> str:
                      f"ms (bound {round(og['p99_bound_s'] * 1e3, 1)} ms), "
                      f"{og['shed_total']} shed + {og['degraded']} "
                      f"degraded"]
+    brecs = doc.get("obs_results")
+    if brecs:
+        rows += ["",
+                 "Observability overhead (README.md §Observability, --obs "
+                 "leg): two identically-warmed serving stacks drain the "
+                 "same steady Zipf traces, tracing disabled vs a live "
+                 "Tracer + CostLog installed (repro/obs).",
+                 "",
+                 "| n | queries | reps | tracing off q/s | tracing on q/s "
+                 "| ratio | spans | cost records |",
+                 "|---|---|---|---|---|---|---|---|"]
+        for r in brecs:
+            rows.append(
+                f"| {r['n']} | {r['queries_per_trace']} | {r['reps']} "
+                f"| {r['tracing_off_qps']} | {r['tracing_on_qps']} "
+                f"| {r['tracing_ratio']} | {r['spans']} "
+                f"| {r['cost_records']} |")
+        bg = doc["gate_obs"]
+        rows += ["", f"**Gate** ({bg['rule']}): "
+                     f"{'PASS' if bg['pass'] else 'FAIL'} — ratio "
+                     f"{bg['tracing_ratio']} (min {bg['min_ratio']})"]
     return "\n".join(rows)
 
 

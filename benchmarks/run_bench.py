@@ -318,7 +318,16 @@ def _gate_delta(results, min_n: int = 10000):
 
 
 def run(smoke: bool = False, full: bool = False, repeats: int = 3,
-        out: str = DEFAULT_OUT, devices: int = 1) -> str:
+        out: str = DEFAULT_OUT, devices: int = 1,
+        cost_out=None) -> str:
+    cost_log = None
+    if cost_out:
+        # every bench solve goes through core.api.shortest_paths, whose
+        # observability shim emits one cost record per solve into the
+        # installed log (repro/obs/profile.py)
+        from repro.obs import CostLog, set_cost_log
+        cost_log = CostLog()
+        set_cost_log(cost_log)
     caps = SMOKE_CAPS if smoke else ENGINE_CAPS
     dense_cap = 100 if smoke else 2000
     sparse_cap = 1000 if smoke else (40000 if full else 20000)
@@ -367,6 +376,15 @@ def run(smoke: bool = False, full: bool = False, repeats: int = 3,
         json.dump(doc, f, indent=1)
         f.write("\n")
     print(f"\nwrote {len(results)} records to {out}")
+    if cost_log is not None:
+        from repro.obs import set_cost_log
+        from repro.obs.validate import validate_cost_records
+        set_cost_log(None)
+        errs = validate_cost_records([r.to_dict() for r in cost_log.records])
+        if errs:
+            raise SystemExit(f"cost records invalid: {errs[:5]}")
+        cost_log.write_jsonl(cost_out)
+        print(f"wrote {len(cost_log.records)} cost records to {cost_out}")
     print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
     if gate_sharded is not None:
         print(f"gate[{gate_sharded['rule']}]: "
@@ -398,6 +416,9 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=_DEFAULT_DEVICES,
                     help="mesh size for the sharded CSR engines (forced "
                          "host device count on CPU); 1 drops the leg")
+    ap.add_argument("--cost-out", default=None, metavar="PATH",
+                    help="write one per-solve cost record per engine call "
+                         "as JSONL (repro/obs/profile.py schema)")
     args = ap.parse_args()
     run(args.smoke, args.full, repeats=args.repeats, out=args.out,
-        devices=args.devices)
+        devices=args.devices, cost_out=args.cost_out)

@@ -400,8 +400,96 @@ def _run_overload(smoke: bool):
     return rec, gate
 
 
+def _run_obs(smoke: bool, trace_out=None):
+    """The --obs leg: TWO identically-warmed serving stacks drain the
+    same fresh-seeded Zipf steady traces — one with tracing disabled,
+    one with a live Tracer + CostLog installed — so both sides see the
+    identical steady mix of cache hits and engine solves.  The gate
+    pins the enabled/disabled throughput ratio >= 0.9 (best of 3 paired
+    drains) — tracing must stay out of the solve hot path.  With
+    ``trace_out`` the enabled side's artifacts are written + validated
+    (chains included: the drains go through submit/tick/solve/answer).
+    Returns (record, gate_obs)."""
+    from repro.obs import (CostLog, Tracer, cost_path_for, finalize_capture,
+                           set_cost_log, set_tracer)
+
+    n = 1000 if smoke else 10000
+    queries = 120 if smoke else 400
+    # smoke drains finish in ~30 ms, where run-to-run jitter swamps any
+    # real tracing cost — take best-of-more there; full-size drains run
+    # for seconds and settle with 3.
+    reps = 7 if smoke else 3
+    cg = C.random_csr_graph(n, 3 * n, seed=n)
+    cold = make_trace("zipf", [("g", n)], num_queries=queries,
+                      rate=RATE, seed=7, hot_seed=13)
+    sched_off = _make_scheduler(cg)
+    sched_on = _make_scheduler(cg)
+    _drain_timed(sched_off, cold, cg, verify=False)
+    _drain_timed(sched_on, cold, cg, verify=False)
+    tr, cl = Tracer(), CostLog()
+    off_qps, on_qps = [], []
+    for rep in range(reps):
+        # fresh event seed per rep, shared hot set: every rep is a
+        # steady-state drain (hot rows cached, cold tail solved), both
+        # sides replay the identical trace, and the side order flips
+        # each rep so clock/cache drift cannot bias one leg.
+        steady = make_trace("zipf", [("g", n)], num_queries=queries,
+                            rate=RATE, seed=8 + rep, hot_seed=13)
+
+        def _off():
+            off_qps.append(_drain_timed(sched_off, steady, cg,
+                                        verify=False)[0])
+
+        def _on():
+            prev_tr, prev_cl = set_tracer(tr), set_cost_log(cl)
+            try:
+                on_qps.append(_drain_timed(sched_on, steady, cg,
+                                           verify=False)[0])
+            finally:
+                set_tracer(prev_tr)
+                set_cost_log(prev_cl)
+
+        first, second = (_off, _on) if rep % 2 == 0 else (_on, _off)
+        first()
+        second()
+    qps_off, qps_on = max(off_qps), max(on_qps)
+    ratio = qps_on / qps_off
+    if trace_out:
+        errs = finalize_capture(tr, cl, trace_out)
+        print(f"  obs      trace: {len(tr.spans)} spans -> {trace_out} | "
+              f"{len(cl.records)} cost records -> {cost_path_for(trace_out)}",
+              flush=True)
+        if errs:
+            for e in errs[:20]:
+                print(f"  obs      trace INVALID: {e}", flush=True)
+            raise SystemExit("observability capture invalid")
+    rec = {
+        "scenario": "zipf-obs", "n": n, "m": 3 * n,
+        "queries_per_trace": queries, "reps": reps,
+        "tracing_off_qps": round(qps_off, 2),
+        "tracing_on_qps": round(qps_on, 2),
+        "tracing_ratio": round(ratio, 4),
+        "spans": len(tr.spans),
+        "cost_records": len(cl.records),
+    }
+    print(f"  obs      n={n}: tracing off {qps_off:8.1f} / on "
+          f"{qps_on:8.1f} q/s ({ratio:.3f}x, best of {reps}), "
+          f"{len(tr.spans)} spans, {len(cl.records)} cost records",
+          flush=True)
+    gate = {
+        "rule": (f"tracing-enabled steady Zipf serving throughput >= 0.9x "
+                 f"tracing-disabled on the same warm trace at n={n} "
+                 f"(best of {reps} drains each)"),
+        "tracing_ratio": rec["tracing_ratio"],
+        "min_ratio": 0.9,
+        "pass": bool(ratio >= 0.9),
+    }
+    return rec, gate
+
+
 def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1,
-        overload: bool = False) -> str:
+        overload: bool = False, obs: bool = False,
+        trace_out=None) -> str:
     n = 1000 if smoke else 10000
     queries = 120 if smoke else 400
     verify = smoke or n <= 2000       # serial verify is O(n^2)/row: cap it
@@ -477,6 +565,10 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1,
         orec, ogate = _run_overload(smoke)
         doc["overload_results"] = [orec]
         doc["gate_overload"] = ogate
+    if obs:
+        brec, bgate = _run_obs(smoke, trace_out=trace_out)
+        doc["obs_results"] = [brec]
+        doc["gate_obs"] = bgate
     with open(out, "w") as f:
         json.dump(doc, f, indent=1)
         f.write("\n")
@@ -496,6 +588,12 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1,
               f"{'PASS' if ogate['pass'] else 'FAIL'}")
         if not ogate["pass"]:
             raise SystemExit("overload degraded-mode gate failed")
+    if obs:
+        bgate = doc["gate_obs"]
+        print(f"gate_obs[{bgate['rule']}]: "
+              f"{'PASS' if bgate['pass'] else 'FAIL'}")
+        if not bgate["pass"]:
+            raise SystemExit("observability overhead gate failed")
     return out
 
 
@@ -510,6 +608,13 @@ if __name__ == "__main__":
     ap.add_argument("--overload", action="store_true",
                     help="add the 2x-offered-load degraded-mode leg and "
                          "its shed-don't-collapse gate")
+    ap.add_argument("--obs", action="store_true",
+                    help="add the observability-overhead leg: tracing on "
+                         "vs off on the same warm Zipf trace, gated at "
+                         ">= 0.9x")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --obs: write + validate the enabled leg's "
+                         "Chrome trace (and .cost.jsonl) here")
     args = ap.parse_args()
     run(args.smoke, out=args.out, devices=args.devices,
-        overload=args.overload)
+        overload=args.overload, obs=args.obs, trace_out=args.trace_out)

@@ -202,7 +202,68 @@ class SsspResult:
     converged: Optional[bool] = None
 
 
+def _edge_count(g) -> int:
+    """Cheap arc count for observability payloads: exact for CSR/dynamic
+    inputs, 0 for dense (counting finite off-diagonals would cost O(n²))."""
+    from repro.dynamic.overlay import DynamicGraph
+
+    if isinstance(g, DynamicGraph):
+        return int(g.nnz_live)
+    if isinstance(g, csr_mod.CsrGraph):
+        return int(g.nnz)
+    return 0
+
+
 def shortest_paths(
+    g: "graph_mod.Graph | csr_mod.CsrGraph | jax.Array | np.ndarray",
+    source,
+    *,
+    engine: str = "serial",
+    mesh: Optional[jax.sharding.Mesh] = None,
+    axis: str = "data",
+    block: int = 256,
+    max_sweeps: int | None = None,
+    delta: Union[float, str, None] = None,
+    target: int | None = None,
+    target_lb: float | None = None,
+) -> SsspResult:
+    """Observability shim over :func:`_shortest_paths` (the real facade,
+    same signature + docs).  When a tracer or cost log is installed
+    (repro/obs), every solve runs inside a ``solve`` span and emits one
+    per-solve cost record (engine, n, m, sweeps, edges_relaxed, wall_ms);
+    when both are disabled this adds two attribute reads and one branch.
+    """
+    from repro.obs.profile import get_cost_log
+    from repro.obs.trace import get_tracer
+
+    tr = get_tracer()
+    cl = get_cost_log()
+    kw = dict(engine=engine, mesh=mesh, axis=axis, block=block,
+              max_sweeps=max_sweeps, delta=delta, target=target,
+              target_lb=target_lb)
+    if not (tr.enabled or cl.enabled):
+        return _shortest_paths(g, source, **kw)
+
+    import time as _time
+
+    m = _edge_count(g)
+    t0 = _time.perf_counter()
+    with tr.span("solve", engine=engine) as sp:
+        res = _shortest_paths(g, source, **kw)
+        wall_ms = (_time.perf_counter() - t0) * 1e3
+        n = int(np.shape(res.dist)[-1])
+        batch = int(np.shape(res.dist)[0]) if np.ndim(res.dist) == 2 else 1
+        sweeps = 0 if res.sweeps is None else int(res.sweeps)
+        edges = 0 if res.edges_relaxed is None else int(res.edges_relaxed)
+        conv = True if res.converged is None else bool(res.converged)
+        sp.set(engine=res.engine, n=n, m=m, batch=batch, sweeps=sweeps,
+               edges_relaxed=edges, converged=conv)
+    cl.emit(engine=res.engine, n=n, m=m, batch=batch, sweeps=sweeps,
+            edges_relaxed=edges, wall_ms=wall_ms, converged=conv)
+    return res
+
+
+def _shortest_paths(
     g: "graph_mod.Graph | csr_mod.CsrGraph | jax.Array | np.ndarray",
     source,
     *,

@@ -37,6 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.multisource import init_dist
+from repro.obs.metrics import mark_trace
 
 INF = jnp.inf
 
@@ -109,6 +110,8 @@ def sssp_bellman_csr(
     out-degree) sweeps use core.frontier.sssp_frontier instead (the old
     dead-defaulted ``use_frontier`` flag here was removed in its favor).
     """
+    # Python body => trace time only; counts (re)traces, free when cached
+    mark_trace("bellman_csr")
     cap = n if max_sweeps is None else max_sweeps
     sweep = sweep_fn or segment_relax_sweep
     dist0 = jnp.full((n,), INF, csr["w"].dtype).at[source].set(0.0)
@@ -158,6 +161,7 @@ def sssp_multisource_csr(
     at least one row may sit above its fixpoint (same guardrail contract
     as :func:`sssp_bellman_csr`).  pred is recovered on demand —
     api.recover_pred reuses the O(m) recovery per row."""
+    mark_trace("multisource_csr")
     cap = n if max_sweeps is None else max_sweeps
     sweep = sweep_fn or segment_relax_sweep_multi
     D0 = init_dist(n, sources, csr["w"].dtype)

@@ -80,6 +80,7 @@ from repro.core.bellman_csr import csr_operands, predecessors_from_dist_csr
 from repro.core.csr import _masked_row_counts
 from repro.core.frontier import (INF, make_flat_sweep_fn, relax_active,
                                  sweep_cap)
+from repro.obs.metrics import mark_trace
 
 #: candidate quantiles of the weight distribution tried by auto_delta,
 #: below the w_max and all-light rungs.
@@ -277,6 +278,7 @@ def sssp_delta_stepping(
     with the in-graph distance bound (n-1)·w_max — the derived form, not
     the legacy 4·n guess (that constant survives as the floor).
     """
+    mark_trace("delta_stepping")
     pull = pull_fn or make_light_pull_fn()
     sweep = sweep_fn or make_flat_sweep_fn(chunk)
     delta = jnp.asarray(delta, jnp.float32)

@@ -71,6 +71,7 @@ import numpy as np
 from jax import lax
 
 from repro.core.bellman_csr import csr_operands, predecessors_from_dist_csr
+from repro.obs.metrics import mark_trace
 
 INF = jnp.inf
 
@@ -246,6 +247,10 @@ def make_flat_sweep_fn(chunk: int = 1024) -> Callable:
     """
 
     def sweep(dist, fids, starts, off, E, fcount, ops):
+        # trace-time marker: the sweep body re-executes only when some
+        # enclosing engine retraces (shape/static drift) — the counter
+        # tests/test_obs.py pins at zero across repeat ticks/versions
+        mark_trace("flat_sweep")
         n = dist.shape[0]
         row_dist = dist[jnp.minimum(fids, n - 1)]   # sentinel rows: 0 slots
         return relax_edge_slots(
@@ -431,6 +436,7 @@ def sssp_frontier(
     so the returned ``pred`` is None (recovering a part-invalid tree
     would cost a full O(m) pass every target caller discards).
     """
+    mark_trace("frontier")
     sweep = sweep_fn or make_flat_sweep_fn(chunk)
     cap = sweep_cap(n, delta, max_sweeps)
     dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)

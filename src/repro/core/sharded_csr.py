@@ -57,6 +57,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core._axes import axis_size, axis_tuple
 from repro.core._compat import pvary, shard_map
 from repro.core.frontier import relax_edge_slots, relax_edge_slots_multi
+from repro.obs.metrics import mark_trace
 
 INF = jnp.inf
 
@@ -134,6 +135,7 @@ def _build_bellman(mesh, axis, n_pad, loc_n, cap):
         out_specs=(P(axis), P(axis), P(), P()),
     )
     def run(in_src, in_dst_loc, in_w, src):
+        mark_trace("bellman_csr_sharded")
         in_src, in_dst_loc, in_w = in_src[0], in_dst_loc[0], in_w[0]
         my_p = lax.axis_index(axis)
         v_base = (my_p * loc_n).astype(jnp.int32)
@@ -243,6 +245,7 @@ def _build_frontier(mesh, axis, n_pad, loc_n, nnz_max, cap, CH, RC):
         out_specs=(P(axis), P(), P(), P()),
     )
     def run(out_indptr, out_dst_loc, out_w, src):
+        mark_trace("frontier_sharded")
         out_indptr, out_dst_loc, out_w = (
             out_indptr[0], out_dst_loc[0], out_w[0])
         my_p = lax.axis_index(axis)
@@ -383,6 +386,7 @@ def _build_multisource_frontier(mesh, axis, n_pad, loc_n, cap, CH, RC, S):
         out_specs=(P(None, axis), P(), P(), P()),
     )
     def run(out_indptr, out_dst_loc, out_w, srcs):
+        mark_trace("multisource_csr_sharded")
         out_indptr, out_dst_loc, out_w = (
             out_indptr[0], out_dst_loc[0], out_w[0])
         my_p = lax.axis_index(axis)

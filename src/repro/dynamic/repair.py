@@ -68,6 +68,7 @@ from repro.core.bellman_csr import segment_relax_sweep
 from repro.core.frontier import (frontier_fixpoint, make_flat_sweep_fn,
                                  pull_edge_slots, sweep_cap)
 from repro.dynamic.overlay import DynamicGraph, MutationBatch
+from repro.obs.metrics import mark_trace
 
 INF = jnp.inf
 
@@ -102,6 +103,7 @@ def make_dynamic_flat_sweep_fn(chunk: int = 1024) -> Callable:
     base = make_flat_sweep_fn(chunk)
 
     def sweep(dist, fids, starts, off, E, fcount, ops):
+        mark_trace("dynamic_flat_sweep")
         nd = base(dist, fids, starts, off, E, fcount, ops)
         n = dist.shape[0]
         # sentinel ids n land in the scratch slot and are sliced away
@@ -159,6 +161,7 @@ def sssp_frontier_dynamic(
     fair "full re-solve" baseline, and the initial solve the first repair
     chains from).  Returns ``(dist, pred, sweeps, edges_relaxed,
     converged)`` with pred recovered over base + overlay arcs."""
+    mark_trace("frontier_dynamic")
     sweep = make_dynamic_flat_sweep_fn(chunk)
     cap = sweep_cap(n, delta, max_sweeps)
     dist0 = jnp.full((n,), INF, ops["out_w"].dtype).at[source].set(0.0)
@@ -219,6 +222,7 @@ def sssp_repair(
     population and ``converged`` the guardrail flag (False iff
     ``max_sweeps=`` capped the re-push before its fixpoint).
     """
+    mark_trace("sssp_repair")
     idx = jnp.arange(n, dtype=jnp.int32)
     # --- invalidated cone: pred-tree descendants of the seed heads, by
     # pointer doubling (after k rounds aff[v] sees ancestors within 2^k).

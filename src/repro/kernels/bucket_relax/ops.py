@@ -22,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import mark_trace
 from repro.kernels.bucket_relax import kernel as K
 from repro.kernels.common import aligned as _aligned
 from repro.kernels.common import auto_interpret
@@ -85,6 +86,7 @@ def make_bucket_pull_fn(*, block_v: int = 256, block_k: int | None = None,
     """
 
     def pull(dist, ops, hi):
+        mark_trace("bucket_kernel_pull")
         return bucket_relax_block(
             dist, ops["light_ell_idx"], ops["light_ell_w"], hi,
             block_v=block_v, block_k=block_k, interpret=interpret,

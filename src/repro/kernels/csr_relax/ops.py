@@ -16,6 +16,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import mark_trace
 from repro.kernels.common import aligned as _aligned
 from repro.kernels.common import auto_interpret
 from repro.kernels.common import pad_to as _pad_to
@@ -78,6 +79,7 @@ def make_csr_sweep_fn(*, block_v: int = 256, block_k: int | None = None,
     retrace + recompile the whole fixpoint loop every solve.
     """
     def fn(dist, csr):
+        mark_trace("csr_kernel_sweep")
         return csr_relax_sweep(
             dist, csr["ell_idx"], csr["ell_w"],
             block_v=block_v, block_k=block_k, interpret=interpret,

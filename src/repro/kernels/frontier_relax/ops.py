@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.obs.metrics import mark_trace
 from repro.kernels.common import aligned as _aligned
 from repro.kernels.common import auto_interpret
 from repro.kernels.common import pad_to as _pad_to
@@ -84,6 +85,7 @@ def make_frontier_sweep_fn(*, block_f: int = 256, block_k: int | None = None,
     """
 
     def sweep(dist, fids, starts, off, E, fcount, ops):
+        mark_trace("frontier_kernel_sweep")
         n = dist.shape[0]
         n_pad = _aligned(n, block_f)
         fpad = _pad_to(fids, n_pad, 0, jnp.int32(n))

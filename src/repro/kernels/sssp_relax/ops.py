@@ -15,6 +15,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import mark_trace
 from repro.kernels.common import aligned as _aligned
 from repro.kernels.common import auto_interpret
 from repro.kernels.common import pad_to as _pad_to
@@ -103,6 +104,7 @@ def make_sweep_fn(*, block_u: int = 256, block_v: int = 256,
     retrace + recompile the whole fixpoint loop every solve.
     """
     def fn(dist, adj):
+        mark_trace("dense_kernel_sweep")
         return relax_sweep(
             dist, adj, block_u=block_u, block_v=block_v, interpret=interpret
         )

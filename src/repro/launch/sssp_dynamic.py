@@ -59,7 +59,7 @@ def replay_wallclock(sched: MicroBatchScheduler, events) -> list:
             _submit(sched, events[i])
             i += 1
         if sched.pending:
-            out = sched.tick()
+            out = sched.tick(now)   # now= stamps Answer.service_start
             done = time.perf_counter() - t0
             for a in out:
                 a.done_at = done
@@ -88,7 +88,7 @@ def replay_verified(sched: MicroBatchScheduler, events,
     answers = []
     for e in events:
         _submit(sched, e)
-        for a in sched.drain():
+        for a in sched.drain(e.arrival):
             answers.append(a)
             if a.via == "mutate":
                 continue
@@ -141,7 +141,17 @@ def main(argv=None):
                     help="deterministic bitwise replay vs serial "
                          "(default: on under --smoke)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="capture observability: Chrome trace JSON to "
+                         "PATH, per-solve cost records to "
+                         "PATH-with-.cost.jsonl; both are schema-"
+                         "validated at exit (repro/obs)")
     args = ap.parse_args(argv)
+
+    capture = None
+    if args.trace_out:
+        from repro.obs import install_capture
+        capture = install_capture()
 
     n = args.n or (256 if args.smoke else 10000)
     events_n = args.events or (120 if args.smoke else 400)
@@ -190,6 +200,12 @@ def main(argv=None):
               f"prep {prep_s:.2f}s) | p50 {lat['p50_ms']:.1f} ms, "
               f"p99 {lat['p99_ms']:.1f} ms, {lat['qps']:.0f} ev/s",
               flush=True)
+        if "queue_p50_ms" in lat:
+            print(f"[sssp_dynamic] churn: queue wait "
+                  f"p50 {lat['queue_p50_ms']:.1f} ms / "
+                  f"p99 {lat['queue_p99_ms']:.1f} ms | service "
+                  f"p50 {lat['service_p50_ms']:.1f} ms / "
+                  f"p99 {lat['service_p99_ms']:.1f} ms", flush=True)
 
     s = sched.stats()
     versions = {name: dyn.version for name, dyn in dyns.items()}
@@ -208,6 +224,21 @@ def main(argv=None):
     print(f"[sssp_dynamic] cache: {c['hits']} hits / {c['misses']} misses "
           f"(rate {c['hit_rate']:.2f}), {c['evictions']} evictions, "
           f"{c['rows']}/{c['capacity']} rows", flush=True)
+    if capture is not None:
+        from repro.obs import cost_path_for, finalize_capture
+        tr, cl = capture
+        errs = finalize_capture(tr, cl, args.trace_out)
+        print(f"[sssp_dynamic] trace: {len(tr.spans)} spans, "
+              f"{len(tr.instants)} instants -> {args.trace_out} | "
+              f"{len(cl.records)} cost records -> "
+              f"{cost_path_for(args.trace_out)}", flush=True)
+        if errs:
+            for e in errs[:20]:
+                print(f"[sssp_dynamic] trace INVALID: {e}", flush=True)
+            raise SystemExit(f"observability capture invalid "
+                             f"({len(errs)} errors)")
+        print("[sssp_dynamic] trace: schema + answer chains valid",
+              flush=True)
     print("[sssp_dynamic] done", flush=True)
 
 

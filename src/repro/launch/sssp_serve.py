@@ -351,7 +351,17 @@ def main(argv=None):
                     help="fault-plan seed (independent of --seed)")
     ap.add_argument("--fault-rate", type=float, default=0.1,
                     help="chaos fault-rate scale factor across sites")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="capture observability: Chrome trace JSON to "
+                         "PATH, per-solve cost records to "
+                         "PATH-with-.cost.jsonl; both are schema-"
+                         "validated at exit (repro/obs)")
     args = ap.parse_args(argv)
+
+    capture = None
+    if args.trace_out:
+        from repro.obs import install_capture
+        capture = install_capture()
 
     n = args.n or (256 if args.smoke else 10000)
     queries = args.queries or (60 if args.smoke else 400)
@@ -367,6 +377,8 @@ def main(argv=None):
 
     if args.chaos:
         run_chaos(args, dispatch)
+        if capture is not None:
+            _finalize_capture(capture, args.trace_out)
         print("[sssp_serve] done", flush=True)
         return
 
@@ -403,6 +415,14 @@ def main(argv=None):
               f"dedup saved {s['dedup_saved']}, "
               f"cache hit rate {s['cache']['hit_rate']:.2f} | "
               f"via {s['answered_via']}", flush=True)
+        if "queue_p50_ms" in lat:
+            # end-to-end latency split: time queued before the serving
+            # tick vs time inside it (LatencyRecorder's two components)
+            print(f"[sssp_serve] {scen}: queue wait "
+                  f"p50 {lat['queue_p50_ms']:.1f} ms / "
+                  f"p99 {lat['queue_p99_ms']:.1f} ms | service "
+                  f"p50 {lat['service_p50_ms']:.1f} ms / "
+                  f"p99 {lat['service_p99_ms']:.1f} ms", flush=True)
         if s["sharded_batches"] or s["sharded_p2p"]:
             print(f"[sssp_serve] {scen}: sharded route "
                   f"{s['sharded_batches']} batches + {s['sharded_p2p']} "
@@ -438,7 +458,28 @@ def main(argv=None):
             print(f"[sssp_serve] {scen}: verified bitwise vs serial "
                   f"({checked} distinct rows)", flush=True)
 
+    if capture is not None:
+        _finalize_capture(capture, args.trace_out)
     print("[sssp_serve] done", flush=True)
+
+
+def _finalize_capture(capture, path: str) -> None:
+    """Write + validate the observability artifacts; abort on schema or
+    answer-chain violations so CI's obs-smoke job fails loudly."""
+    from repro.obs import cost_path_for, finalize_capture
+
+    tr, cl = capture
+    errs = finalize_capture(tr, cl, path)
+    print(f"[sssp_serve] trace: {len(tr.spans)} spans, "
+          f"{len(tr.instants)} instants -> {path} | "
+          f"{len(cl.records)} cost records -> {cost_path_for(path)}",
+          flush=True)
+    if errs:
+        for e in errs[:20]:
+            print(f"[sssp_serve] trace INVALID: {e}", flush=True)
+        raise SystemExit(f"observability capture invalid "
+                         f"({len(errs)} errors)")
+    print("[sssp_serve] trace: schema + answer chains valid", flush=True)
 
 
 if __name__ == "__main__":

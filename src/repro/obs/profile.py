@@ -1,0 +1,138 @@
+"""Per-solve cost records — the training data for a measured cost model.
+
+Every engine solve (batched multisource, p2p early-exit, API-level
+single source, dynamic repair) can emit one `CostRecord` mapping the
+*decision inputs* an engine selector would see —
+``(engine, n, m, batch, nprocs, delta)`` — to the *measured outcome*
+``(sweeps, edges_relaxed, wall_ms, converged)``.  ROADMAP item 4's
+self-tuning dispatch fits its cost model on exactly these rows.
+
+Emission follows the tracer pattern: a module-level no-op `CostLog`
+singleton, replaced by the launch drivers when ``--trace-out`` is
+given.  `emit()` on the null log is a constant-time early return, so
+instrumented call sites cost nothing in normal runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+__all__ = [
+    "CostRecord",
+    "CostLog",
+    "NULL_COST_LOG",
+    "get_cost_log",
+    "set_cost_log",
+]
+
+COST_RECORD_FIELDS = (
+    "engine",
+    "graph",
+    "n",
+    "m",
+    "batch",
+    "nprocs",
+    "delta",
+    "sweeps",
+    "edges_relaxed",
+    "wall_ms",
+    "converged",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class CostRecord:
+    """One solve: decision inputs → measured outcome."""
+
+    engine: str          # which engine ran (bellman_csr, frontier, ...)
+    graph: str           # registry graph name, or "" outside serving
+    n: int               # vertex count
+    m: int               # edge count
+    batch: int           # padded multisource bucket size (1 for p2p/single)
+    nprocs: int          # mesh size for sharded solves, else 1
+    delta: float         # Δ-stepping bucket width, 0.0 when not applicable
+    sweeps: int          # relaxation sweeps / bucket phases executed
+    edges_relaxed: int   # total edge relaxations performed
+    wall_ms: float       # host wall-clock for the solve, ms
+    converged: bool      # fixpoint reached within the sweep cap
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+class CostLog:
+    """Append-only in-memory cost-record sink with a JSONL exporter."""
+
+    enabled = True
+
+    def __init__(self) -> None:
+        self.records: List[CostRecord] = []
+
+    def emit(
+        self,
+        *,
+        engine: str,
+        n: int,
+        m: int,
+        sweeps: int,
+        edges_relaxed: int,
+        wall_ms: float,
+        converged: bool,
+        graph: str = "",
+        batch: int = 1,
+        nprocs: int = 1,
+        delta: float = 0.0,
+    ) -> None:
+        self.records.append(
+            CostRecord(
+                engine=str(engine),
+                graph=str(graph),
+                n=int(n),
+                m=int(m),
+                batch=int(batch),
+                nprocs=int(nprocs),
+                delta=float(delta),
+                sweeps=int(sweeps),
+                edges_relaxed=int(edges_relaxed),
+                wall_ms=float(wall_ms),
+                converged=bool(converged),
+            )
+        )
+
+    def write_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for r in self.records:
+                f.write(json.dumps(r.to_dict()) + "\n")
+
+    def clear(self) -> None:
+        self.records.clear()
+
+
+class _NullCostLog(CostLog):
+    """Disabled sink: emit() drops the record before building it."""
+
+    enabled = False
+
+    def __init__(self) -> None:
+        self.records = []
+
+    def emit(self, **kwargs: Any) -> None:  # noqa: D102 - no-op
+        return None
+
+
+NULL_COST_LOG = _NullCostLog()
+
+_current: CostLog = NULL_COST_LOG
+
+
+def get_cost_log() -> CostLog:
+    return _current
+
+
+def set_cost_log(log: Optional[CostLog]) -> CostLog:
+    """Install ``log`` process-wide; returns the previous one."""
+    global _current
+    prev = _current
+    _current = log if log is not None else NULL_COST_LOG
+    return prev

@@ -25,6 +25,8 @@ from typing import Hashable, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 
 class DistanceCache:
     """LRU cache of solved distance rows keyed by ``(graph, source)``.
@@ -32,17 +34,37 @@ class DistanceCache:
     ``capacity`` bounds the number of rows held; 0 disables caching (every
     ``get`` is a miss, ``put`` is a no-op) so the sequential baseline in
     benchmarks/serve_bench.py can run the same scheduler cache-less.
+
+    Counters live on a `MetricsRegistry` (own instance by default, or a
+    shared one via ``metrics=``) under the ``cache.*`` namespace; the
+    legacy ``hits``/``misses``/``evictions`` attributes and ``stats()``
+    dict are views over it.
     """
 
-    def __init__(self, capacity: int = 256):
+    def __init__(self, capacity: int = 256,
+                 metrics: Optional[MetricsRegistry] = None):
         if capacity < 0:
             raise ValueError(f"capacity must be >= 0, got {capacity}")
         self.capacity = capacity
         self._rows: "collections.OrderedDict[Hashable, np.ndarray]" = (
             collections.OrderedDict())
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._hits = self.metrics.counter("cache.hits")
+        self._misses = self.metrics.counter("cache.misses")
+        self._evictions = self.metrics.counter("cache.evictions")
+        self.metrics.gauge("cache.rows", fn=lambda: len(self._rows))
+
+    @property
+    def hits(self) -> int:
+        return self._hits.value
+
+    @property
+    def misses(self) -> int:
+        return self._misses.value
+
+    @property
+    def evictions(self) -> int:
+        return self._evictions.value
 
     def __len__(self) -> int:
         return len(self._rows)
@@ -51,10 +73,10 @@ class DistanceCache:
         """Return the cached row (refreshing its recency) or None."""
         row = self._rows.get(key)
         if row is None:
-            self.misses += 1
+            self._misses.inc()
             return None
         self._rows.move_to_end(key)
-        self.hits += 1
+        self._hits.inc()
         return row
 
     def peek(self, key: Hashable) -> Optional[np.ndarray]:
@@ -98,7 +120,7 @@ class DistanceCache:
         self._rows[key] = row
         while len(self._rows) > self.capacity:
             self._rows.popitem(last=False)
-            self.evictions += 1
+            self._evictions.inc()
 
     def pop(self, key: Hashable) -> Optional[np.ndarray]:
         """Remove and return one row without touching the hit/miss
@@ -129,6 +151,8 @@ class DistanceCache:
         return self.hits / total if total else 0.0
 
     def stats(self) -> dict:
+        """Legacy flat view; the same counts appear in
+        ``metrics.snapshot()`` under the ``cache.*`` namespace."""
         return {
             "rows": len(self._rows),
             "capacity": self.capacity,

@@ -46,6 +46,7 @@ from repro.core import graph as graph_mod
 from repro.core.bellman_csr import csr_operands
 from repro.core.frontier import frontier_operands
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.landmarks import LandmarkSet, build_landmarks
 
 
@@ -90,6 +91,13 @@ class GraphHandle:
     @property
     def n(self) -> int:
         return self.dyn.n if self.dyn is not None else self.cg.n
+
+    @property
+    def m(self) -> int:
+        """Stored arc count at the current version (live arcs for
+        dynamic overlays) — the edge-size axis of a solve's cost record."""
+        return (self.dyn.nnz_live if self.dyn is not None
+                else self.cg.nnz)
 
     @property
     def version(self) -> int:
@@ -234,18 +242,41 @@ class GraphRegistry:
 
     ``byte_budget=None`` disables eviction (the registry still accounts
     bytes).  ``on_evict(name)`` callbacks run for every evicted graph.
+
+    Counters live on a `MetricsRegistry` (own instance by default, or a
+    shared one via ``metrics=``) under the ``registry.*`` namespace; the
+    legacy attributes and ``stats()`` dict are views over it.
     """
 
-    def __init__(self, byte_budget: Optional[int] = None):
+    def __init__(self, byte_budget: Optional[int] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         self.byte_budget = byte_budget
         self._graphs: "collections.OrderedDict[str, GraphHandle]" = (
             collections.OrderedDict())
         self._on_evict: list[Callable[[str], None]] = []
         self._on_mutate: list[Callable] = []
-        self.registered = 0
-        self.evicted = 0
-        self.mutations = 0
-        self.edges_mutated = 0
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._registered = self.metrics.counter("registry.registered")
+        self._evicted = self.metrics.counter("registry.evicted")
+        self._mutations = self.metrics.counter("registry.mutations")
+        self._edges_mutated = self.metrics.counter("registry.edges_mutated")
+        self.metrics.gauge("registry.graphs", fn=lambda: len(self._graphs))
+
+    @property
+    def registered(self) -> int:
+        return self._registered.value
+
+    @property
+    def evicted(self) -> int:
+        return self._evicted.value
+
+    @property
+    def mutations(self) -> int:
+        return self._mutations.value
+
+    @property
+    def edges_mutated(self) -> int:
+        return self._edges_mutated.value
 
     def __len__(self) -> int:
         return len(self._graphs)
@@ -304,7 +335,7 @@ class GraphRegistry:
         if name in self._graphs:
             self._evict(name)
         self._graphs[name] = handle
-        self.registered += 1
+        self._registered.inc()
         self._maybe_evict()
         return handle
 
@@ -345,8 +376,8 @@ class GraphRegistry:
             raise
         batch = handle.dyn.commit()
         if batch.records:
-            self.mutations += 1
-            self.edges_mutated += len(batch.records)
+            self._mutations.inc()
+            self._edges_mutated.inc(len(batch.records))
             ls = handle.landmarks
             if ls is not None and not handle.landmarks_stale:
                 handle.landmarks_stale = any(
@@ -382,7 +413,7 @@ class GraphRegistry:
 
     def _evict(self, name: str) -> None:
         del self._graphs[name]
-        self.evicted += 1
+        self._evicted.inc()
         for fn in self._on_evict:
             fn(name)
 
@@ -396,6 +427,8 @@ class GraphRegistry:
             self._evict(lru)
 
     def stats(self) -> dict:
+        """Legacy flat view; the event counts also appear in
+        ``metrics.snapshot()`` under the ``registry.*`` namespace."""
         return {
             "graphs": len(self._graphs),
             "bytes_in_use": self.bytes_in_use,

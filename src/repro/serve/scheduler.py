@@ -91,6 +91,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Optional
 
 import jax.numpy as jnp
@@ -99,6 +100,9 @@ import numpy as np
 from repro.core.bellman_csr import sssp_multisource_csr
 from repro.core.frontier import sssp_frontier
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.profile import get_cost_log
+from repro.obs.trace import get_tracer
 from repro.serve.cache import DistanceCache
 from repro.serve.dispatch import DispatchPolicy, default_policy
 from repro.serve.errors import (STATUS_OK, DeadlineExceeded, GraphGone,
@@ -154,6 +158,10 @@ class Answer:
                                         # guarantee applies to ``value``
     error: Optional[ServeError] = None  # the typed failure, iff not ok
     bounds: Optional[tuple] = None      # (lb, ub) for degraded p2p answers
+    service_start: Optional[float] = None   # clock at which the answering
+                                        # tick began (tick(now=...)); the
+                                        # queue-wait / service-time pivot
+                                        # for workload.LatencyRecorder
 
     @property
     def ok(self) -> bool:
@@ -192,7 +200,25 @@ class MicroBatchScheduler:
     ``faults``
         A serve/faults.FaultPlan probed at the solve / stage / evict /
         mutate / clip seams (chaos harness).
+
+    All event counters live on a `MetricsRegistry` under the ``sched.*``
+    namespace (``metrics=`` shares one across components; the default is
+    a fresh instance per scheduler so two schedulers never alias).  The
+    legacy plain-attribute reads (``sched.engine_batches`` ...) resolve
+    through ``__getattr__`` onto the registry, ``stats()`` keeps its
+    historical shape, and ``snapshot()`` is the uniform merged view of
+    scheduler + cache + registry series.
     """
+
+    # every legacy int counter, now one sched.* series each
+    _COUNTER_NAMES = (
+        "ticks", "engine_batches", "engine_sources", "sharded_batches",
+        "sharded_p2p", "sharded_sources", "sharded_edges", "target_solves",
+        "dedup_saved", "rows_kept", "rows_repaired", "rows_invalidated",
+        "rows_staled", "repair_edges", "submissions_rejected", "shed",
+        "deadline_expired", "degraded_p2p", "degraded_batch",
+        "solve_exceptions", "retries", "not_converged",
+    )
 
     def __init__(
         self,
@@ -210,6 +236,7 @@ class MicroBatchScheduler:
         degrade: bool = True,
         degrade_margin: float = 0.0,
         faults=None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -235,39 +262,47 @@ class MicroBatchScheduler:
         self._queue: "collections.deque[Query]" = collections.deque()
         self._mutations: "collections.deque[Mutation]" = collections.deque()
         self._next_qid = 0
-        self.ticks = 0
-        self.engine_batches = 0
-        self.engine_sources = 0
-        # sharded-route slices of the above plus the engines' measured
-        # relaxation counters (the serve_bench sharded gate divides
-        # sharded_edges by sharded_sources for edges-per-solved-source).
-        self.sharded_batches = 0
-        self.sharded_p2p = 0
-        self.sharded_sources = 0
-        self.sharded_edges = 0
-        self.target_solves = 0
-        self.dedup_saved = 0
-        self.occupancy_sum = 0.0
-        self.rows_kept = 0
-        self.rows_repaired = 0
-        self.rows_invalidated = 0
-        self.rows_staled = 0
-        self.repair_edges = 0
+        # one sched.* series per legacy counter; __getattr__ serves the
+        # old plain-attribute reads from these.  The sharded slices feed
+        # the serve_bench sharded gate (sharded_edges / sharded_sources
+        # = edges-per-solved-source).
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c = {name: self.metrics.counter(f"sched.{name}")
+                   for name in self._COUNTER_NAMES}
+        # running sum of per-batch occupancy (distinct/bucket) plus the
+        # last observed value as the per-tick occupancy gauge
+        self._occ_sum = self.metrics.gauge("sched.occupancy_sum")
+        self._occ_last = self.metrics.gauge("sched.occupancy")
+        self._via = {v: self.metrics.counter("sched.answered", via=v)
+                     for v in VIAS}
         self.last_mutation_error: Optional[str] = None
-        self.answered_via = {v: 0 for v in VIAS}
-        self.answered_status: "collections.Counter[str]" = (
-            collections.Counter())
-        # fault-tolerance counters
-        self.submissions_rejected = 0
-        self.shed = 0
-        self.deadline_expired = 0
-        self.degraded_p2p = 0
-        self.degraded_batch = 0
-        self.solve_exceptions = 0
-        self.retries = 0
-        self.not_converged = 0
         self._shed_acks: list = []          # delivered at next tick's start
         self._last_tick_stalled = False     # drain()'s progress-guard flag
+
+    def __getattr__(self, name: str):
+        # legacy counter attributes (sched.ticks, sched.engine_batches,
+        # ...) read straight off the metrics registry
+        c = self.__dict__.get("_c")
+        if c is not None and name in c:
+            return c[name].value
+        raise AttributeError(
+            f"{type(self).__name__!r} object has no attribute {name!r}")
+
+    @property
+    def occupancy_sum(self) -> float:
+        return self._occ_sum.value
+
+    @property
+    def answered_via(self) -> dict:
+        return {v: c.value for v, c in self._via.items()}
+
+    @property
+    def answered_status(self) -> "collections.Counter[str]":
+        out: "collections.Counter[str]" = collections.Counter()
+        for s in self.metrics.find("sched.answered_status"):
+            labels = dict(s.labels)
+            out[labels.get("status", "?")] = s.value
+        return out
 
     # -- queue ------------------------------------------------------------
 
@@ -321,7 +356,7 @@ class MicroBatchScheduler:
                             f"{what} {v} out of range for graph {graph!r} "
                             f"(n={n})")
         except QueryRejected:
-            self.submissions_rejected += 1
+            self._c["submissions_rejected"].inc()
             raise
         q = Query(qid=self._next_qid, graph=graph, source=src, target=tgt,
                   arrival=arrival, deadline=deadline)
@@ -331,6 +366,10 @@ class MicroBatchScheduler:
             self._admit_saturated(q)
         else:
             self._queue.append(q)
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("submit", qid=q.qid, graph=graph, source=src,
+                       target=tgt)
         return q
 
     def _admit_saturated(self, q: Query) -> None:
@@ -346,13 +385,13 @@ class MicroBatchScheduler:
                     victim_i = i
                     break
         if victim_i is None:
-            self.submissions_rejected += 1
+            self._c["submissions_rejected"].inc()
             raise QueryRejected(
                 f"queue saturated ({self.max_queue} pending); resubmit "
                 "after a tick drains")
         victim = self._queue[victim_i]
         del self._queue[victim_i]
-        self.shed += 1
+        self._c["shed"].inc()
         err = QueryRejected(
             f"shed under saturation in favor of query {q.qid}")
         self._shed_acks.append(Answer(victim, None, "error",
@@ -373,6 +412,9 @@ class MicroBatchScheduler:
                      arrival=arrival)
         self._next_qid += 1
         self._mutations.append(m)
+        tr = get_tracer()
+        if tr.enabled:
+            tr.instant("submit", qid=m.qid, graph=graph, op=op)
         return m
 
     @property
@@ -394,6 +436,7 @@ class MicroBatchScheduler:
         for m in drained:
             by_graph.setdefault(m.graph, []).append(m)
         acks = []
+        tr = get_tracer()
         for name, muts in by_graph.items():
             edits = [m.edit for m in muts]
             if self.faults is not None and self.faults.roll(
@@ -403,7 +446,8 @@ class MicroBatchScheduler:
                 # and every mutation in it is acked rejected.
                 edits = edits + [("update", -1, -1, 1.0)]
             try:
-                self.registry.mutate(name, edits)
+                with tr.span("mutate", graph=name, edits=len(edits)):
+                    self.registry.mutate(name, edits)
                 version = self.registry.get(name).version
                 acks.extend(Answer(m, version, "mutate") for m in muts)
             except (KeyError, ValueError, IndexError) as e:
@@ -427,14 +471,31 @@ class MicroBatchScheduler:
         degraded serving is on, RETAINED under their old version key as
         stale-but-versioned fallbacks (never served exact: exact lookups
         only ever consult the current version's key)."""
+        if not batch.records:
+            return
+        tr = get_tracer()
+        if not tr.enabled:
+            self._reconcile_rows(name, handle, batch, old_ops)
+            return
+        with tr.span("repair", graph=name, version=handle.version,
+                     edits=len(batch.records)) as sp:
+            kept0, rep0, inv0 = (self.rows_kept, self.rows_repaired,
+                                 self.rows_invalidated)
+            edges0 = self.repair_edges
+            self._reconcile_rows(name, handle, batch, old_ops)
+            sp.set(rows_kept=self.rows_kept - kept0,
+                   rows_repaired=self.rows_repaired - rep0,
+                   rows_invalidated=self.rows_invalidated - inv0,
+                   repair_edges=self.repair_edges - edges0)
+
+    def _reconcile_rows(self, name, handle, batch, old_ops) -> None:
         import jax.numpy as jnp
 
         from repro.core.api import SsspResult
         from repro.dynamic.repair import (predecessors_from_dist_dynamic,
                                           repair_sssp, row_affected)
 
-        if not batch.records:
-            return
+        cl = get_cost_log()
         # walk LRU -> MRU so the re-puts (which append at the MRU end)
         # PRESERVE the graph's recency order; the repair budget still
         # goes to the hottest rows — the affected keys nearest the MRU
@@ -457,9 +518,10 @@ class MicroBatchScheduler:
             if key not in affected:
                 self.cache.pop(key)
                 self.cache.put(handle.row_key(source), row)
-                self.rows_kept += 1
+                self._c["rows_kept"].inc()
             elif key in repair:
                 self.cache.pop(key)
+                t0 = time.perf_counter() if cl.enabled else 0.0
                 pred = predecessors_from_dist_dynamic(
                     jnp.asarray(row), old_ops, jnp.int32(source))
                 prev = SsspResult(
@@ -467,14 +529,20 @@ class MicroBatchScheduler:
                     engine="cache", sources=np.asarray([source], np.int32))
                 res, _ = repair_sssp(handle.dyn, prev, batch)
                 self.cache.put(handle.row_key(source), res.dist)
-                self.rows_repaired += 1
-                self.repair_edges += res.edges_relaxed or 0
+                self._c["rows_repaired"].inc()
+                self._c["repair_edges"].inc(res.edges_relaxed or 0)
+                if cl.enabled:
+                    cl.emit(engine="repair", graph=name, n=handle.n,
+                            m=handle.m, sweeps=int(res.sweeps or 0),
+                            edges_relaxed=int(res.edges_relaxed or 0),
+                            wall_ms=(time.perf_counter() - t0) * 1e3,
+                            converged=True)
             else:
-                self.rows_invalidated += 1
+                self._c["rows_invalidated"].inc()
                 if self.degrade:
                     # retained under its OLD version key: invisible to
                     # exact lookups, available to _try_degraded.
-                    self.rows_staled += 1
+                    self._c["rows_staled"].inc()
                 else:
                     self.cache.pop(key)
 
@@ -545,7 +613,7 @@ class MicroBatchScheduler:
             if not np.isfinite(ub):
                 return None
             lb = ls.lower_bound(q.source, q.target)
-            self.degraded_p2p += 1
+            self._c["degraded_p2p"].inc()
             return Answer(q, float(ub), "degraded", exact=False,
                           bounds=(float(lb), float(ub)))
         if handle.dyn is None:
@@ -553,7 +621,7 @@ class MicroBatchScheduler:
         for key in reversed(self.cache.keys_for(handle.name)):  # MRU first
             if (len(key) == 3 and key[2] == q.source
                     and key[1] != handle.version):
-                self.degraded_batch += 1
+                self._c["degraded_batch"].inc()
                 return Answer(q, self.cache.peek(key), "degraded",
                               exact=False)
         return None
@@ -596,47 +664,79 @@ class MicroBatchScheduler:
         partial row never is (``dist[target]`` bytes identical either
         way).  Raises :class:`NotConverged` when a sweep cap stopped the
         engine short — capped labels are never served or cached."""
+        tr = get_tracer()
+        cl = get_cost_log()
+        obs = tr.enabled or cl.enabled
         choice = self.dispatch.choose(handle, kind="p2p")
         if choice.sharded:
             from repro.core.sharded_csr import sssp_frontier_sharded
 
-            self._probe("stage", handle.name)
-            parts = handle.partition(choice.nprocs)
-            pops = handle.partition_ops(choice.nprocs)
-            self.registry.touch_staged(handle.name)
-            self._probe("solve", handle.name)
-            ms = self._sweep_cap(handle.name)
-            d, _, e, conv = sssp_frontier_sharded(
-                parts, q.source, choice.mesh, axis=choice.axis, ops=pops,
-                max_sweeps=ms)
-            self.target_solves += 1
-            self.sharded_p2p += 1
-            self.sharded_sources += 1
-            self.sharded_edges += int(e)
-            if not int(conv):
+            with tr.span("p2p_solve", qids=(q.qid,)) as sp:
+                with tr.span("stage", graph=handle.name):
+                    self._probe("stage", handle.name)
+                    parts = handle.partition(choice.nprocs)
+                    pops = handle.partition_ops(choice.nprocs)
+                    self.registry.touch_staged(handle.name)
+                self._probe("solve", handle.name)
+                ms = self._sweep_cap(handle.name)
+                t0 = time.perf_counter() if obs else 0.0
+                d, sw, e, conv = sssp_frontier_sharded(
+                    parts, q.source, choice.mesh, axis=choice.axis,
+                    ops=pops, max_sweeps=ms)
+                conv = bool(int(conv))
+                self._c["target_solves"].inc()
+                self._c["sharded_p2p"].inc()
+                self._c["sharded_sources"].inc()
+                self._c["sharded_edges"].inc(int(e))
+                if obs:
+                    wall_ms = (time.perf_counter() - t0) * 1e3
+                    if tr.enabled:
+                        sp.set(engine="frontier_sharded", graph=handle.name,
+                               n=handle.n, m=handle.m, B=1,
+                               P=choice.nprocs, sweeps=int(sw),
+                               edges_relaxed=int(e), converged=conv)
+                    cl.emit(engine="frontier_sharded", graph=handle.name,
+                            n=handle.n, m=handle.m, nprocs=choice.nprocs,
+                            sweeps=int(sw), edges_relaxed=int(e),
+                            wall_ms=wall_ms, converged=conv)
+            if not conv:
                 raise NotConverged(
                     f"sharded p2p solve on {handle.name!r} capped at "
                     f"max_sweeps={ms}")
             row = np.asarray(d)[:handle.n]
             self.cache.put(self._row_key(handle, q.source), row)
             return Answer(q, float(row[q.target]), "target")
-        self._probe("stage", handle.name)
-        ops = handle.frontier_ops()
-        self.registry.touch_staged(handle.name)
-        lb = None
-        ls = handle.landmarks_ready()
-        if ls is not None:
-            lb = ls.conservative_lb(q.source, q.target)
-            lb = None if not np.isfinite(lb) else jnp.float32(lb)
-        self._probe("solve", handle.name)
-        ms = self._sweep_cap(handle.name)
-        d, _, _, _, conv = sssp_frontier(
-            ops, jnp.int32(q.source), n=handle.n,
-            sweep_fn=handle.frontier_sweep_fn(), max_sweeps=ms,
-            target=jnp.int32(q.target), target_lb=lb,
-        )
-        self.target_solves += 1
-        if not bool(conv):
+        with tr.span("p2p_solve", qids=(q.qid,)) as sp:
+            with tr.span("stage", graph=handle.name):
+                self._probe("stage", handle.name)
+                ops = handle.frontier_ops()
+                self.registry.touch_staged(handle.name)
+            lb = None
+            ls = handle.landmarks_ready()
+            if ls is not None:
+                lb = ls.conservative_lb(q.source, q.target)
+                lb = None if not np.isfinite(lb) else jnp.float32(lb)
+            self._probe("solve", handle.name)
+            ms = self._sweep_cap(handle.name)
+            t0 = time.perf_counter() if obs else 0.0
+            d, _, sw, e, conv = sssp_frontier(
+                ops, jnp.int32(q.source), n=handle.n,
+                sweep_fn=handle.frontier_sweep_fn(), max_sweeps=ms,
+                target=jnp.int32(q.target), target_lb=lb,
+            )
+            conv = bool(conv)
+            self._c["target_solves"].inc()
+            if obs:
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                if tr.enabled:
+                    sp.set(engine="frontier", graph=handle.name,
+                           n=handle.n, m=handle.m, B=1, P=1,
+                           sweeps=int(sw), edges_relaxed=int(e),
+                           converged=conv)
+                cl.emit(engine="frontier", graph=handle.name, n=handle.n,
+                        m=handle.m, sweeps=int(sw), edges_relaxed=int(e),
+                        wall_ms=wall_ms, converged=conv)
+        if not conv:
             raise NotConverged(
                 f"p2p solve on {handle.name!r} capped at max_sweeps={ms} "
                 "before the target settled")
@@ -656,39 +756,71 @@ class MicroBatchScheduler:
         bucket = self._bucket(len(distinct))
         padded = distinct + [distinct[0]] * (bucket - len(distinct))
         choice = self.dispatch.choose(handle, kind="batch")
-        if choice.sharded:
-            from repro.core.sharded_csr import sssp_multisource_csr_sharded
+        tr = get_tracer()
+        cl = get_cost_log()
+        obs = tr.enabled or cl.enabled
+        qids = tuple(q.qid for q in queries) if obs else ()
+        with tr.span("batch_solve", qids=qids) as sp:
+            if choice.sharded:
+                from repro.core.sharded_csr import (
+                    sssp_multisource_csr_sharded)
 
-            self._probe("stage", handle.name)
-            parts = handle.partition(choice.nprocs)
-            pops = handle.partition_ops(choice.nprocs)
-            self.registry.touch_staged(handle.name)
-            self._probe("solve", handle.name)
-            ms = self._sweep_cap(handle.name)
-            D, _, e, conv = sssp_multisource_csr_sharded(
-                parts, jnp.asarray(padded, jnp.int32), choice.mesh,
-                axis=choice.axis, ops=pops, max_sweeps=ms)
-            rows = np.asarray(D)[:, :handle.n]
-            converged = bool(int(conv))
-            self.sharded_batches += 1
-            self.sharded_sources += len(distinct)
-            self.sharded_edges += int(e)
-        else:
-            self._probe("stage", handle.name)
-            ops = handle.csr_ops()
-            self.registry.touch_staged(handle.name)
-            self._probe("solve", handle.name)
-            ms = self._sweep_cap(handle.name)
-            D, _, conv = sssp_multisource_csr(
-                ops, jnp.asarray(padded, jnp.int32),
-                n=handle.n, sweep_fn=handle.multisource_sweep_fn(),
-                max_sweeps=ms)
-            rows = np.asarray(D)
-            converged = bool(conv)
-        self.engine_batches += 1
-        self.engine_sources += len(distinct)
-        self.dedup_saved += len(queries) - len(distinct)
-        self.occupancy_sum += len(distinct) / bucket
+                engine = "multisource_csr_sharded"
+                with tr.span("stage", graph=handle.name):
+                    self._probe("stage", handle.name)
+                    parts = handle.partition(choice.nprocs)
+                    pops = handle.partition_ops(choice.nprocs)
+                    self.registry.touch_staged(handle.name)
+                self._probe("solve", handle.name)
+                ms = self._sweep_cap(handle.name)
+                t0 = time.perf_counter() if obs else 0.0
+                D, sw, e, conv = sssp_multisource_csr_sharded(
+                    parts, jnp.asarray(padded, jnp.int32), choice.mesh,
+                    axis=choice.axis, ops=pops, max_sweeps=ms)
+                rows = np.asarray(D)[:, :handle.n]
+                converged = bool(int(conv))
+                edges = int(e)
+                self._c["sharded_batches"].inc()
+                self._c["sharded_sources"].inc(len(distinct))
+                self._c["sharded_edges"].inc(edges)
+            else:
+                engine = "multisource_csr"
+                with tr.span("stage", graph=handle.name):
+                    self._probe("stage", handle.name)
+                    ops = handle.csr_ops()
+                    self.registry.touch_staged(handle.name)
+                self._probe("solve", handle.name)
+                ms = self._sweep_cap(handle.name)
+                t0 = time.perf_counter() if obs else 0.0
+                D, sw, conv = sssp_multisource_csr(
+                    ops, jnp.asarray(padded, jnp.int32),
+                    n=handle.n, sweep_fn=handle.multisource_sweep_fn(),
+                    max_sweeps=ms)
+                rows = np.asarray(D)
+                converged = bool(conv)
+                # the segment engine relaxes every stored arc for every
+                # bucket lane each sweep — exact, not sampled
+                edges = int(sw) * handle.m * bucket if obs else 0
+            self._c["engine_batches"].inc()
+            self._c["engine_sources"].inc(len(distinct))
+            self._c["dedup_saved"].inc(len(queries) - len(distinct))
+            occupancy = len(distinct) / bucket
+            self._occ_sum.add(occupancy)
+            self._occ_last.set(occupancy)
+            if obs:
+                wall_ms = (time.perf_counter() - t0) * 1e3
+                if tr.enabled:
+                    sp.set(engine=engine, graph=handle.name, n=handle.n,
+                           m=handle.m, B=bucket,
+                           P=choice.nprocs if choice.sharded else 1,
+                           sweeps=int(sw), edges_relaxed=edges,
+                           occupancy=round(occupancy, 4),
+                           converged=converged)
+                cl.emit(engine=engine, graph=handle.name, n=handle.n,
+                        m=handle.m, batch=bucket,
+                        nprocs=choice.nprocs if choice.sharded else 1,
+                        sweeps=int(sw), edges_relaxed=edges,
+                        wall_ms=wall_ms, converged=converged)
         if not converged:
             raise NotConverged(
                 f"batched solve on {handle.name!r} ({len(distinct)} "
@@ -725,7 +857,7 @@ class MicroBatchScheduler:
             else:
                 q.not_before = self.ticks + min(
                     2 ** (q.attempts - 1), self.backoff_cap)
-                self.retries += 1
+                self._c["retries"].inc()
                 requeue.append(q)
         return failed
 
@@ -747,7 +879,21 @@ class MicroBatchScheduler:
         self._last_tick_stalled = False
         if not self._queue and not self._mutations and not self._shed_acks:
             return []
-        self.ticks += 1
+        tr = get_tracer()
+        if not tr.enabled:
+            return self._tick(now)
+        with tr.span("tick", tick=self.ticks + 1) as sp:
+            answers = self._tick(now)
+            sp.set(answers=len(answers), pending=self.pending)
+            # emitted inside the span: an answer belongs to its tick,
+            # which is what obs/validate's chain reconstruction pins
+            for a in answers:
+                tr.instant("answer", qid=a.query.qid, via=a.via,
+                           status=a.status, exact=a.exact)
+        return answers
+
+    def _tick(self, now: Optional[float]) -> list:
+        self._c["ticks"].inc()
         retries0 = self.retries
         answers: list = list(self._shed_acks)
         self._shed_acks = []
@@ -763,7 +909,7 @@ class MicroBatchScheduler:
             live = []
             for q in batch:
                 if q.deadline is not None and now > q.deadline:
-                    self.deadline_expired += 1
+                    self._c["deadline_expired"].inc()
                     answers.append(self._fail(q, DeadlineExceeded(
                         f"deadline {q.deadline:.6f} passed at "
                         f"now={now:.6f} before serving")))
@@ -851,10 +997,10 @@ class MicroBatchScheduler:
                 # a capped solve is NOT transient — retrying under the
                 # same cap re-runs the identical truncation, so answer
                 # typed immediately (satisfying the guardrail contract).
-                self.not_converged += len(take)
+                self._c["not_converged"].inc(len(take))
                 answers.extend(self._fail(q, e) for q in take)
             except Exception as e:    # injected or real engine failure
-                self.solve_exceptions += 1
+                self._c["solve_exceptions"].inc()
                 answers.extend(self._retry_or_fail(take, e, requeue))
         for q in reversed(requeue):
             self._queue.appendleft(q)
@@ -864,8 +1010,11 @@ class MicroBatchScheduler:
         self._last_tick_stalled = (bool(batch) and not answers
                                    and self.retries == retries0)
         for a in answers:
-            self.answered_via[a.via] += 1
-            self.answered_status[a.status] += 1
+            if now is not None and a.service_start is None:
+                a.service_start = now
+            self._via[a.via].inc()
+            self.metrics.counter("sched.answered_status",
+                                 status=a.status).inc()
         return answers
 
     def drain(self, now: Optional[float] = None) -> list:
@@ -892,7 +1041,22 @@ class MicroBatchScheduler:
         return (self.occupancy_sum / self.engine_batches
                 if self.engine_batches else 0.0)
 
+    def snapshot(self) -> dict:
+        """The uniform metrics view: every scheduler, cache, and registry
+        series merged into one flat sorted ``{name: value}`` dict (the
+        components may share one registry or own separate ones — the
+        ``sched.`` / ``cache.`` / ``registry.`` prefixes cannot collide).
+        Deterministic under seeded replay: only event counts and set
+        gauges, no wall-clock values."""
+        merged = dict(self.metrics.snapshot())
+        for reg in (self.cache.metrics, self.registry.metrics):
+            if reg is not self.metrics:
+                merged.update(reg.snapshot())
+        return dict(sorted(merged.items()))
+
     def stats(self) -> dict:
+        """Legacy nested view, unchanged shape; every count in it is
+        derived from the same series :meth:`snapshot` reports."""
         return {
             "ticks": self.ticks,
             "engine_batches": self.engine_batches,

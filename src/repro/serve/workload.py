@@ -244,10 +244,27 @@ def make_churn_trace(
 
 
 class LatencyRecorder:
-    """Accumulates per-answer latencies and renders the serving summary."""
+    """Accumulates per-answer latencies and renders the serving summary.
+
+    End-to-end latency (completion - arrival) is split into its two
+    components when the scheduler stamps ``Answer.service_start`` (the
+    tick clock at which the answering tick began):
+
+    * **queue wait** = service_start - arrival — time spent waiting for
+      a tick to pick the query up (batching + backlog delay), and
+    * **service time** = completion - service_start — time inside the
+      answering tick (staging + solve + cache work).
+
+    The split is the attribution the paper's "synchronization overhead"
+    claim needs: a fat queue_p99 with thin service_p99 is a scheduling/
+    arrival-rate problem, the reverse is an engine problem.  Answers
+    without a stamp (service_start None) count only toward end-to-end.
+    """
 
     def __init__(self):
         self.latencies: list[float] = []
+        self.queue_waits: list[float] = []
+        self.service_times: list[float] = []
         self.first_arrival: Optional[float] = None
         self.last_done: float = 0.0
 
@@ -255,20 +272,37 @@ class LatencyRecorder:
         """Record one Answer completed at wall-clock offset ``now``
         (latency = completion - arrival, i.e. queueing + service)."""
         self.latencies.append(now - answer.query.arrival)
+        start = getattr(answer, "service_start", None)
+        if start is not None:
+            self.queue_waits.append(max(0.0, start - answer.query.arrival))
+            self.service_times.append(max(0.0, now - start))
         a = answer.query.arrival
         if self.first_arrival is None or a < self.first_arrival:
             self.first_arrival = a
         self.last_done = max(self.last_done, now)
+
+    @staticmethod
+    def _pcts(values: list, prefix: str) -> dict:
+        xs = np.asarray(values, np.float64)
+        if xs.size == 0:
+            return {}
+        return {
+            f"{prefix}_p50_ms": round(float(np.percentile(xs, 50)) * 1e3, 3),
+            f"{prefix}_p99_ms": round(float(np.percentile(xs, 99)) * 1e3, 3),
+        }
 
     def summary(self) -> dict:
         lat = np.asarray(self.latencies, np.float64)
         if lat.size == 0:
             return {"queries": 0}
         span = max(self.last_done - (self.first_arrival or 0.0), 1e-9)
-        return {
+        out = {
             "queries": int(lat.size),
             "p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
             "max_ms": round(float(lat.max()) * 1e3, 3),
             "qps": round(lat.size / span, 2),
         }
+        out.update(self._pcts(self.queue_waits, "queue"))
+        out.update(self._pcts(self.service_times, "service"))
+        return out
