@@ -193,9 +193,8 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT,
             raise SystemExit(f"cost records invalid: {errs[:5]}")
         cost_log.write_jsonl(cost_out)
         print(f"wrote {len(cost_log.records)} cost records to {cost_out}")
-    print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
-    if not gate["pass"]:
-        raise SystemExit("dynamic repair gate failed")
+    from benchmarks.gates import enforce
+    enforce(doc)
     return out
 
 

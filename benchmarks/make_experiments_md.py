@@ -1,8 +1,9 @@
 """Assemble EXPERIMENTS.md §Dry-run, §Roofline, §SSSP-bench, §Serve-bench,
-§Dynamic-bench, and §Weak-scaling tables from the dry-run JSON records,
-BENCH_sssp.json, BENCH_serve.json, BENCH_dynamic.json, and
-experiments/bench/weak_scaling.csv (single sources of truth), leaving
-hand-written sections (§Paper, §Perf) intact via marker comments.
+§Dynamic-bench, §Tune-bench, and §Weak-scaling tables from the dry-run
+JSON records, BENCH_sssp.json, BENCH_serve.json, BENCH_dynamic.json,
+BENCH_tune.json, and experiments/bench/weak_scaling.csv (single sources
+of truth), leaving hand-written sections (§Paper, §Perf) intact via
+marker comments.
 
     PYTHONPATH=src python -m benchmarks.make_experiments_md
 """
@@ -19,6 +20,7 @@ DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
 BENCH_JSON = os.path.join(REPO, "BENCH_sssp.json")
 SERVE_JSON = os.path.join(REPO, "BENCH_serve.json")
 DYNAMIC_JSON = os.path.join(REPO, "BENCH_dynamic.json")
+TUNE_JSON = os.path.join(REPO, "BENCH_tune.json")
 WEAK_CSV = os.path.join(OUT_DIR, "weak_scaling.csv")
 MD = os.path.join(REPO, "EXPERIMENTS.md")
 
@@ -274,6 +276,38 @@ def dynamic_table(path: str) -> str:
     return "\n".join(rows)
 
 
+def tune_table(path: str) -> str:
+    """BENCH_tune.json (benchmarks/tune_bench.py) -> per-leg race of the
+    measured-model policy against the hard-coded thresholds plus the
+    gate_tune summary."""
+    with open(path) as f:
+        doc = json.load(f)
+    meta = doc["meta"]
+    cov = meta.get("model_coverage", {})
+    rows = [f"jax {meta['jax']} on {meta['backend']}"
+            f"{' (smoke)' if meta.get('smoke') else ''}, best of "
+            f"{meta['repeats']}; model fitted from "
+            f"`{os.path.basename(meta['calibration'])}` "
+            f"({cov.get('records', '?')} calibrated points over "
+            f"{len(cov.get('engines', []))} engine groups); every leg "
+            "solves `engine=\"auto\"` under each policy and the answers "
+            "are bitwise-compared.",
+            "",
+            "| corpus | n | P | threshold engine | ms | model engine "
+            "| ms | via | ratio |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in doc["results"]:
+        rows.append(
+            f"| {r['corpus']} | {r['n']} | {r['nprocs']} "
+            f"| {r['base']['engine']} | {r['base']['wall_s'] * 1e3:.2f} "
+            f"| {r['tuned']['engine']} | {r['tuned']['wall_s'] * 1e3:.2f} "
+            f"| {r['tuned']['via']} | {r['ratio']} |")
+    gate = doc["gate_tune"]
+    rows += ["", f"**Gate** ({gate['rule']}): "
+                 f"{'PASS' if gate['pass'] else 'FAIL'}"]
+    return "\n".join(rows)
+
+
 def weak_scaling_table(path: str) -> str:
     """experiments/bench/weak_scaling.csv (benchmarks/weak_scaling.py) ->
     fixed-n/proc scaling table: dense column slabs vs the vertex-
@@ -312,6 +346,8 @@ def main():
         text = splice(text, "serve-bench", serve_table(SERVE_JSON))
     if os.path.exists(DYNAMIC_JSON):
         text = splice(text, "dynamic-bench", dynamic_table(DYNAMIC_JSON))
+    if os.path.exists(TUNE_JSON):
+        text = splice(text, "tune-bench", tune_table(TUNE_JSON))
     if os.path.exists(WEAK_CSV):
         text = splice(text, "weak-scaling", weak_scaling_table(WEAK_CSV))
     with open(MD, "w") as f:
@@ -320,6 +356,7 @@ def main():
           f"{' + SSSP bench' if os.path.exists(BENCH_JSON) else ''}"
           f"{' + serve bench' if os.path.exists(SERVE_JSON) else ''}"
           f"{' + dynamic bench' if os.path.exists(DYNAMIC_JSON) else ''}"
+          f"{' + tune bench' if os.path.exists(TUNE_JSON) else ''}"
           f"{' + weak scaling' if os.path.exists(WEAK_CSV) else ''}"
           f" into {MD}")
 

@@ -385,23 +385,12 @@ def run(smoke: bool = False, full: bool = False, repeats: int = 3,
             raise SystemExit(f"cost records invalid: {errs[:5]}")
         cost_log.write_jsonl(cost_out)
         print(f"wrote {len(cost_log.records)} cost records to {cost_out}")
-    print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
-    if gate_sharded is not None:
-        print(f"gate[{gate_sharded['rule']}]: "
-              f"{'PASS' if gate_sharded['pass'] else 'FAIL'}")
-    if gate_delta is not None:
-        print(f"gate[{gate_delta['rule']}]: "
-              f"{'PASS' if gate_delta['pass'] else 'FAIL'}")
     if bad:
         raise SystemExit(
             f"bitwise disagreement in {[(r['n'], r['engine']) for r in bad]}"
         )
-    if not gate["pass"]:
-        raise SystemExit("edges-relaxed gate failed")
-    if gate_sharded is not None and not gate_sharded["pass"]:
-        raise SystemExit("sharded edges-relaxed gate failed")
-    if gate_delta is not None and not gate_delta["pass"]:
-        raise SystemExit("delta-stepping gate failed")
+    from benchmarks.gates import enforce
+    enforce(doc)
     return out
 
 

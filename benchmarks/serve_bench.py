@@ -573,27 +573,8 @@ def run(smoke: bool = False, out: str = DEFAULT_OUT, devices: int = 1,
         json.dump(doc, f, indent=1)
         f.write("\n")
     print(f"\nwrote {len(records)} scenario records to {out}")
-    print(f"gate[{gate['rule']}]: {'PASS' if gate['pass'] else 'FAIL'}")
-    if not gate["pass"]:
-        raise SystemExit("serving throughput gate failed")
-    if devices > 1:
-        sgate = doc["gate_sharded"]
-        print(f"gate_sharded[{sgate['rule']}]: "
-              f"{'PASS' if sgate['pass'] else 'FAIL'}")
-        if not sgate["pass"]:
-            raise SystemExit("sharded serving gate failed")
-    if overload:
-        ogate = doc["gate_overload"]
-        print(f"gate_overload[{ogate['rule']}]: "
-              f"{'PASS' if ogate['pass'] else 'FAIL'}")
-        if not ogate["pass"]:
-            raise SystemExit("overload degraded-mode gate failed")
-    if obs:
-        bgate = doc["gate_obs"]
-        print(f"gate_obs[{bgate['rule']}]: "
-              f"{'PASS' if bgate['pass'] else 'FAIL'}")
-        if not bgate["pass"]:
-            raise SystemExit("observability overhead gate failed")
+    from benchmarks.gates import enforce
+    enforce(doc)
     return out
 
 

@@ -214,6 +214,29 @@ def _edge_count(g) -> int:
     return 0
 
 
+def _resolve_auto(g, source, *, engine, mesh, axis, delta, target):
+    """Resolve ``engine="auto"`` through the serving layer's one dispatch
+    seam (serve/dispatch.py): the process-default policy picks the engine
+    AND its statics — a measured-model policy (repro/tune/select.py)
+    returns a calibrated Δ, which binds only when the caller passed none
+    (an explicit ``delta=`` always wins).  Lazy import keeps core free of
+    a hard serve dependency.  Returns the concrete
+    ``(engine, mesh, axis, delta)``; non-auto calls pass through."""
+    if engine != "auto":
+        return engine, mesh, axis, delta
+    from repro.serve.dispatch import default_policy
+
+    multi = np.ndim(source) > 0
+    choice = default_policy().choose(
+        g, kind="batch" if multi else ("p2p" if target is not None
+                                       else "single"))
+    engine, mesh, axis = choice.engine, choice.mesh, choice.axis
+    if (delta is None and choice.delta is not None
+            and engine in _DELTA_CONSUMERS):
+        delta = float(choice.delta)
+    return engine, mesh, axis, delta
+
+
 def shortest_paths(
     g: "graph_mod.Graph | csr_mod.CsrGraph | jax.Array | np.ndarray",
     source,
@@ -238,14 +261,23 @@ def shortest_paths(
 
     tr = get_tracer()
     cl = get_cost_log()
-    kw = dict(engine=engine, mesh=mesh, axis=axis, block=block,
-              max_sweeps=max_sweeps, delta=delta, target=target,
-              target_lb=target_lb)
     if not (tr.enabled or cl.enabled):
-        return _shortest_paths(g, source, **kw)
+        return _shortest_paths(g, source, engine=engine, mesh=mesh,
+                               axis=axis, block=block,
+                               max_sweeps=max_sweeps, delta=delta,
+                               target=target, target_lb=target_lb)
 
     import time as _time
 
+    # resolve "auto" HERE so the record carries the routed engine's real
+    # decision inputs (mesh arity, model-chosen Δ) — the facade below
+    # passes the already-concrete engine straight through.
+    engine, mesh, axis, delta = _resolve_auto(
+        g, source, engine=engine, mesh=mesh, axis=axis, delta=delta,
+        target=target)
+    kw = dict(engine=engine, mesh=mesh, axis=axis, block=block,
+              max_sweeps=max_sweeps, delta=delta, target=target,
+              target_lb=target_lb)
     m = _edge_count(g)
     t0 = _time.perf_counter()
     with tr.span("solve", engine=engine) as sp:
@@ -258,8 +290,22 @@ def shortest_paths(
         conv = True if res.converged is None else bool(res.converged)
         sp.set(engine=res.engine, n=n, m=m, batch=batch, sweeps=sweeps,
                edges_relaxed=edges, converged=conv)
-    cl.emit(engine=res.engine, n=n, m=m, batch=batch, sweeps=sweeps,
-            edges_relaxed=edges, wall_ms=wall_ms, converged=conv)
+    nprocs = (int(mesh.devices.size)
+              if mesh is not None and res.engine in SHARDED_CSR_ENGINES
+              else 1)
+    # the Δ the solve actually used: an explicit width verbatim; the
+    # delta engines' None/"auto" resolves per graph via the memoized
+    # auto_delta (identical to what the facade resolved); 0.0 otherwise.
+    if isinstance(delta, (int, float)) and not isinstance(delta, bool):
+        dval = float(delta)
+    elif (res.engine in DELTA_ENGINES
+          and isinstance(g, csr_mod.CsrGraph)):
+        dval = float(auto_delta(g))
+    else:
+        dval = 0.0
+    cl.emit(engine=res.engine, n=n, m=m, batch=batch, nprocs=nprocs,
+            delta=dval, sweeps=sweeps, edges_relaxed=edges,
+            wall_ms=wall_ms, converged=conv)
     return res
 
 
@@ -317,15 +363,11 @@ def _shortest_paths(
     """
     if engine == "auto":
         # the serving layer's one dispatch seam (serve/dispatch.py) picks
-        # between the single-device and sharded engines; lazy import keeps
-        # core free of a hard serve dependency.
-        from repro.serve.dispatch import default_policy
-
-        multi = np.ndim(source) > 0
-        choice = default_policy().choose(
-            g, kind="batch" if multi else ("p2p" if target is not None
-                                           else "single"))
-        engine, mesh, axis = choice.engine, choice.mesh, choice.axis
+        # the engine and its statics (a model policy's calibrated Δ binds
+        # only when the caller passed no delta= of their own).
+        engine, mesh, axis, delta = _resolve_auto(
+            g, source, engine=engine, mesh=mesh, axis=axis, delta=delta,
+            target=target)
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
     # Δ validation is EAGER (before any staging): a bad width would

@@ -356,6 +356,12 @@ def main(argv=None):
                          "PATH, per-solve cost records to "
                          "PATH-with-.cost.jsonl; both are schema-"
                          "validated at exit (repro/obs)")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="serve through the measured cost model fitted "
+                         "from this CALIBRATION.json (repro/tune) "
+                         "instead of the hard-coded thresholds; "
+                         "out-of-support queries still fall back to "
+                         "them")
     args = ap.parse_args(argv)
 
     capture = None
@@ -368,8 +374,17 @@ def main(argv=None):
     rate = args.rate or (2000.0 if args.smoke else 500.0)
     verify = args.verify if args.verify is not None else args.smoke
     scenarios = SCENARIOS if args.scenario == "all" else (args.scenario,)
-    dispatch = DispatchPolicy(shard_threshold=args.shard_threshold,
-                              nprocs=args.devices)
+    if args.calibration:
+        from repro.tune.model import load_model
+        from repro.tune.select import TunedPolicy
+        dispatch = TunedPolicy(load_model(args.calibration),
+                               shard_threshold=args.shard_threshold,
+                               nprocs=args.devices)
+        print(f"[sssp_serve] tuned dispatch from {args.calibration}: "
+              f"{dispatch.model.coverage()['engines']}", flush=True)
+    else:
+        dispatch = DispatchPolicy(shard_threshold=args.shard_threshold,
+                                  nprocs=args.devices)
     set_default_policy(dispatch)    # engine="auto" callers agree with us
     if dispatch.nprocs > 1:
         print(f"[sssp_serve] sharded route: {dispatch.nprocs} devices, "

@@ -25,7 +25,8 @@ from .metrics import (
     mark_trace,
     trace_count,
 )
-from .profile import CostLog, CostRecord, NULL_COST_LOG, get_cost_log, set_cost_log
+from .profile import (CostLog, CostRecord, NULL_COST_LOG, backend_info,
+                      get_cost_log, set_cost_log)
 from .trace import NULL_TRACER, NullTracer, Span, Tracer, get_tracer, set_tracer
 
 __all__ = [
@@ -40,6 +41,7 @@ __all__ = [
     "default_registry",
     "mark_trace",
     "trace_count",
+    "backend_info",
     "CostLog",
     "CostRecord",
     "NULL_COST_LOG",

@@ -22,11 +22,13 @@ __all__ = [
     "CostRecord",
     "CostLog",
     "NULL_COST_LOG",
+    "backend_info",
     "get_cost_log",
     "set_cost_log",
 ]
 
-COST_RECORD_FIELDS = (
+# schema v1: the decision/outcome fields every record must carry.
+COST_RECORD_FIELDS_V1 = (
     "engine",
     "graph",
     "n",
@@ -39,6 +41,31 @@ COST_RECORD_FIELDS = (
     "wall_ms",
     "converged",
 )
+
+# schema v2 adds the hardware identity: a cost model fitted on one
+# backend is meaningless on another (the paper's MPI/CUDA crossover
+# moves with the hardware), so records name where they were measured.
+# obs/validate.py accepts both versions; new emitters always write v2.
+COST_RECORD_FIELDS_V2_EXTRA = ("backend", "device_kind")
+COST_RECORD_FIELDS = COST_RECORD_FIELDS_V1 + COST_RECORD_FIELDS_V2_EXTRA
+COST_RECORD_SCHEMA = 2
+
+_backend_info: Optional[tuple] = None
+
+
+def backend_info() -> tuple:
+    """``(backend, device_kind)`` of the running process — e.g.
+    ``("cpu", "cpu")`` or ``("gpu", "NVIDIA A100...")``.  Cached after
+    the first call; jax is imported lazily so a pure log-reading process
+    never initializes a backend."""
+    global _backend_info
+    if _backend_info is None:
+        import jax
+
+        devs = jax.devices()
+        _backend_info = (str(jax.default_backend()),
+                         str(devs[0].device_kind) if devs else "")
+    return _backend_info
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +83,8 @@ class CostRecord:
     edges_relaxed: int   # total edge relaxations performed
     wall_ms: float       # host wall-clock for the solve, ms
     converged: bool      # fixpoint reached within the sweep cap
+    backend: str = ""    # jax.default_backend() at measurement (v2)
+    device_kind: str = ""  # device_kind of device 0 at measurement (v2)
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)
@@ -83,7 +112,15 @@ class CostLog:
         batch: int = 1,
         nprocs: int = 1,
         delta: float = 0.0,
+        backend: str = "",
+        device_kind: str = "",
     ) -> None:
+        if not backend or not device_kind:
+            # v2: stamp the measuring hardware so fitted models can
+            # refuse records from a different backend (tune/replay.py).
+            be, dk = backend_info()
+            backend = backend or be
+            device_kind = device_kind or dk
         self.records.append(
             CostRecord(
                 engine=str(engine),
@@ -97,6 +134,8 @@ class CostLog:
                 edges_relaxed=int(edges_relaxed),
                 wall_ms=float(wall_ms),
                 converged=bool(converged),
+                backend=str(backend),
+                device_kind=str(device_kind),
             )
         )
 

@@ -20,7 +20,7 @@ import json
 import sys
 from typing import Any, Dict, List
 
-from .profile import COST_RECORD_FIELDS
+from .profile import COST_RECORD_FIELDS_V1, COST_RECORD_FIELDS_V2_EXTRA
 
 __all__ = [
     "validate_chrome_trace",
@@ -70,15 +70,26 @@ def validate_chrome_trace(doc: Dict[str, Any]) -> List[str]:
 
 
 def validate_cost_records(rows: List[Dict[str, Any]]) -> List[str]:
-    """Return a list of cost-record schema violations (empty == valid)."""
+    """Return a list of cost-record schema violations (empty == valid).
+
+    Accepts both schema versions: v1 records carry only the decision/
+    outcome fields; v2 additionally stamps ``backend``/``device_kind``
+    (non-empty strings when present) — a record may omit them (v1) but
+    may not carry them malformed.
+    """
     errs: List[str] = []
     for i, r in enumerate(rows):
         if not isinstance(r, dict):
             errs.append(f"record {i}: not an object")
             continue
-        for key in COST_RECORD_FIELDS:
+        for key in COST_RECORD_FIELDS_V1:
             if key not in r:
                 errs.append(f"record {i}: missing {key!r}")
+        for key in COST_RECORD_FIELDS_V2_EXTRA:
+            if key in r and (not isinstance(r[key], str) or not r[key]):
+                errs.append(
+                    f"record {i}: {key} must be a non-empty string "
+                    f"when present (v2)")
         for key in ("n", "m", "batch", "nprocs", "sweeps", "edges_relaxed"):
             if key in r and (not isinstance(r[key], int) or r[key] < 0):
                 errs.append(f"record {i}: {key} must be a non-negative int")

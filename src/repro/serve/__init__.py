@@ -15,8 +15,8 @@ chaos-injection plans the scheduler probes (README.md §Robustness).
 """
 from repro.serve.cache import DistanceCache
 from repro.serve.dispatch import (DispatchPolicy, EngineChoice,
-                                  default_policy, serving_mesh,
-                                  set_default_policy)
+                                  default_policy, policy_override,
+                                  serving_mesh, set_default_policy)
 from repro.serve.errors import (STATUS_OK, STATUSES, DeadlineExceeded,
                                 GraphGone, NotConverged, QueryRejected,
                                 SchedulerStalled, ServeError, SolveFailed)
@@ -58,6 +58,7 @@ __all__ = [
     "TraceEvent",
     "build_landmarks",
     "default_policy",
+    "policy_override",
     "make_churn_trace",
     "make_trace",
     "serving_mesh",

@@ -32,6 +32,7 @@ performance" (arXiv 1505.05033) — rows live with their owner.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Optional
@@ -69,11 +70,27 @@ def serving_mesh(nprocs: int, axis: str = "data") -> jax.sharding.Mesh:
 @dataclasses.dataclass(frozen=True)
 class EngineChoice:
     """One routing decision: which engine, on which mesh (None for the
-    single-device engines), and the shard arity cache keys must carry."""
+    single-device engines), and the shard arity cache keys must carry.
+
+    The optional statics fields let a policy return not just the engine
+    but its tuning parameters, so every caller's magic numbers route
+    through this one seam (ROADMAP item 4): ``delta`` is the Δ-bucket
+    width for the engines that consume one, ``chunk`` the frontier
+    engines' scatter chunk, ``batch_cap`` the padded multisource bucket
+    ceiling the scheduler should admit per tick.  ``None`` (the
+    threshold policy's value) means "caller keeps its default" — the
+    measured-model policy (repro/tune/select.py) fills them from
+    calibrated data.  ``via`` names which arm decided: ``"threshold"``
+    for the hard-coded size rules, ``"model"`` for a fitted cost model.
+    """
     engine: str
     mesh: Optional[jax.sharding.Mesh]
     axis: str = "data"
     nprocs: int = 1
+    delta: Optional[float] = None
+    chunk: Optional[int] = None
+    batch_cap: Optional[int] = None
+    via: str = "threshold"
 
     @property
     def sharded(self) -> bool:
@@ -144,6 +161,14 @@ class DispatchPolicy:
 
         return bool(delta_profile(g)["routable"])
 
+    def batch_cap(self, g) -> Optional[int]:
+        """Per-tick distinct-source admission ceiling for batched solves
+        of ``g``, or ``None`` for "scheduler keeps its ``max_batch``".
+        Pure (no mesh/staging), called at admission time — the threshold
+        policy has no opinion; the measured-model policy returns the
+        calibrated bucket size (tune/select.py)."""
+        return None
+
     def choose(self, g, *, kind: str = "single") -> EngineChoice:
         """Route one solve.  ``g`` is anything with an ``n`` (CsrGraph,
         Graph, DynamicGraph, GraphHandle-like) or a dense square array;
@@ -180,8 +205,27 @@ def default_policy() -> DispatchPolicy:
     return _DEFAULT
 
 
-def set_default_policy(policy: Optional[DispatchPolicy]) -> None:
+def set_default_policy(
+        policy: Optional[DispatchPolicy]) -> Optional[DispatchPolicy]:
     """Install (or with ``None`` reset) the process-wide policy — the
-    launcher wires its ``--shard-threshold`` / ``--devices`` flags here."""
+    launcher wires its ``--shard-threshold`` / ``--devices`` flags here.
+    Returns the PREVIOUS policy (``None`` if it was still the lazy
+    default) so callers can restore it; prefer :func:`policy_override`
+    for scoped swaps."""
     global _DEFAULT
+    prev = _DEFAULT
     _DEFAULT = policy
+    return prev
+
+
+@contextlib.contextmanager
+def policy_override(policy: Optional[DispatchPolicy]):
+    """Scoped :func:`set_default_policy`: installs ``policy`` for the
+    ``with`` body and restores the previous one on exit (exception
+    included) — how tests and the tuner race two policies without
+    leaking global state.  Yields the installed policy."""
+    prev = set_default_policy(policy)
+    try:
+        yield policy
+    finally:
+        set_default_policy(prev)

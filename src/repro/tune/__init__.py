@@ -1,0 +1,47 @@
+"""Self-tuning engine selection: measured cost model + replay gating.
+
+The paper's central finding — the winning parallelization strategy is
+workload- and hardware-dependent — made every hard-coded threshold in
+serve/dispatch.py a guess.  This package closes the loop (ROADMAP item
+4) on the cost records PR 9's observability layer already emits:
+
+- `repro.tune.calibrate` — sweep the engine matrix over a design grid
+  of (corpus, n, m, batch, nprocs, Δ) on the running backend, through
+  the existing ``api.shortest_paths`` + ``CostLog`` shim; writes a
+  versioned ``CALIBRATION.json``.
+- `repro.tune.model` — deterministic per-(engine, nprocs) log-space
+  least-squares cost model fitted from those records, with seeded
+  bootstrap confidence, coverage reporting, and explicit calibrated
+  support ranges.
+- `repro.tune.select` — ``TunedPolicy``, a drop-in ``DispatchPolicy``
+  that returns the predicted-fastest engine *plus its statics* (Δ,
+  bucket cap B, shard arity) through the one existing seam, falling
+  back to the hard-coded thresholds outside calibrated support.
+- `repro.tune.features` — cheap memoized topology features (degree
+  skew, BFS hop eccentricity / frontier width) that separate the
+  corpora the engines diverge on.
+- `repro.tune.replay` — trace-replay perf regression gate: a recorded
+  cost log re-run against the fitted model fails CI when measured wall
+  drifts beyond tolerance.
+
+Selection never changes answers — every candidate engine is bitwise-
+equal-to-serial (benchmarks/run_bench.py pins it); the model only moves
+wall time.  benchmarks/tune_bench.py races the tuned policy against the
+thresholds and records ``gate_tune`` in ``BENCH_tune.json``.
+"""
+from repro.tune.features import graph_features
+from repro.tune.model import (CostModel, EngineFit, fit_model,
+                              load_calibration, load_model)
+from repro.tune.replay import replay_records
+from repro.tune.select import TunedPolicy
+
+__all__ = [
+    "CostModel",
+    "EngineFit",
+    "TunedPolicy",
+    "fit_model",
+    "graph_features",
+    "load_calibration",
+    "load_model",
+    "replay_records",
+]

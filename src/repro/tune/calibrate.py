@@ -1,0 +1,253 @@
+"""Calibration harness: sweep the engine matrix, write CALIBRATION.json.
+
+The paper's central finding is that the winning strategy is workload-
+dependent — so the crossovers must be *measured on the running backend*,
+not baked in.  This harness sweeps every applicable engine over a small
+design grid spanning the axes the selector will be asked about:
+
+- graph family (random sparse / road-grid / skewed-hub — i.e. degree
+  skew and frontier width, see tune/features.py),
+- size (n, m), batch width S, shard arity P (when devices exist),
+- Δ candidates for the Δ-stepping engine.
+
+Every solve goes through the existing ``api.shortest_paths`` +
+``obs.CostLog`` shim — the calibration records ARE ordinary v2 cost
+records, plus the per-graph topology features and corpus tag the model
+fits on.  Per configuration the harness runs one warmup (jit compile)
+plus ``repeats`` timed calls and keeps the MIN-wall record, the same
+best-of-N envelope benchmarks/common.py uses.
+
+    PYTHONPATH=src python -m repro.tune.calibrate [--smoke] [--devices P]
+        [--repeats N] [--out CALIBRATION.json]
+
+``--smoke`` shrinks the grid to CI size (< ~1 min on CPU).  The output
+is versioned (``schema``) and stamped with the measuring backend; models
+fitted from it refuse to replay logs from a different backend
+(tune/replay.py).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+# Device count must be fixed before jax initializes; parse --devices by
+# hand (same pattern as benchmarks/run_bench.py).
+_DEFAULT_DEVICES = 1
+if __name__ == "__main__" and "--help" not in sys.argv and "-h" not in sys.argv:
+    _n = _DEFAULT_DEVICES
+    for _i, _a in enumerate(sys.argv):
+        try:
+            if _a == "--devices":
+                _n = int(sys.argv[_i + 1])
+            elif _a.startswith("--devices="):
+                _n = int(_a.split("=", 1)[1])
+        except (IndexError, ValueError):
+            break
+    if _n > 1:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={_n} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import platform
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+CALIBRATION_SCHEMA = 1
+DEFAULT_OUT = "CALIBRATION.json"
+
+# (corpus, n, m) grid points; m is None for the generator-shaped corpora
+FULL_GRID = (
+    ("sparse", 5000, 15000),
+    ("sparse", 10000, 30000),
+    ("sparse", 10000, 80000),     # m-variation: separates log m from log n
+    ("sparse", 20000, 60000),
+    ("road", 2500, None),
+    ("road", 10000, None),
+    ("road", 20000, None),
+    ("hub", 2500, None),
+    ("hub", 10000, None),
+    ("hub", 20000, None),
+)
+SMOKE_GRID = (
+    ("sparse", 256, 768),
+    ("sparse", 512, 1536),
+    ("sparse", 1024, 3072),
+    ("sparse", 1024, 8192),
+    ("road", 256, None),
+    ("road", 1024, None),
+    ("hub", 256, None),
+    ("hub", 1024, None),
+)
+
+BATCHES_FULL = (4, 16)
+BATCHES_SMOKE = (2, 4)
+
+
+def make_graph(corpus: str, n: int, m: Optional[int]):
+    from repro.core import csr as C
+
+    if corpus == "sparse":
+        return C.random_csr_graph(n, m, seed=n + m)
+    if corpus == "road":
+        return C.road_like_csr_graph(n, seed=n)
+    if corpus == "hub":
+        return C.skewed_hub_csr_graph(n, seed=n)
+    raise ValueError(f"unknown corpus {corpus!r}")
+
+
+def _delta_candidates(cg, smoke: bool) -> List[float]:
+    """Δ widths to race for one graph: the profile's auto width always;
+    full runs bracket it so the model can find a measured-better one."""
+    from repro.core.delta_stepping import auto_delta
+
+    d0 = float(auto_delta(cg))
+    if smoke:
+        return [d0]
+    return [d0, d0 / 8.0, d0 * 2.0]
+
+
+def _measure(fn, cost_log, repeats: int, extra: Dict[str, Any]):
+    """warmup + repeats through the api shim; returns the min-wall cost
+    record (as a dict) annotated with ``extra``."""
+    fn()                              # jit warm; its record is discarded
+    start = len(cost_log.records)
+    for _ in range(repeats):
+        fn()
+    recs = cost_log.records[start:]
+    best = min(recs, key=lambda r: r.wall_ms)
+    row = best.to_dict()
+    row.update(extra)
+    return row
+
+
+def sweep(grid, *, repeats: int = 3, devices: int = 1,
+          smoke: bool = False, batches=None,
+          verbose: bool = True) -> List[Dict[str, Any]]:
+    """Run the calibration sweep over ``grid``; returns record dicts."""
+    import jax
+
+    from repro.core.api import shortest_paths
+    from repro.core.delta_stepping import delta_profile
+    from repro.obs import CostLog, set_cost_log
+    from repro.tune.features import graph_features
+
+    batches = batches if batches is not None else (
+        BATCHES_SMOKE if smoke else BATCHES_FULL)
+    mesh = None
+    if devices > 1:
+        if jax.device_count() < devices:
+            raise SystemExit(
+                f"--devices {devices} needs {devices} XLA devices but only "
+                f"{jax.device_count()} exist (run via `python -m "
+                f"repro.tune.calibrate`, which forces the host count)")
+        from repro.core._compat import make_mesh
+        mesh = make_mesh((devices,), ("data",))
+
+    log = CostLog()
+    prev = set_cost_log(log)
+    records: List[Dict[str, Any]] = []
+    try:
+        for corpus, n, m in grid:
+            cg = make_graph(corpus, n, m)
+            feats = graph_features(cg)
+            extra = {"corpus": corpus, "hops": feats["hops"],
+                     "skew": round(feats["skew"], 4),
+                     "width": round(feats["width"], 2),
+                     "repeats": repeats}
+            srcs = np.linspace(0, cg.n - 1, max(batches)).astype(np.int32)
+
+            def tag(row):
+                records.append(row)
+                if verbose:
+                    print(f"  {corpus} n={cg.n:6d} {row['engine']:24s} "
+                          f"B={row['batch']:<3d} P={row['nprocs']} "
+                          f"delta={row['delta']:<12.4g} "
+                          f"{row['wall_ms']:9.2f}ms", flush=True)
+
+            for engine in ("frontier", "bellman_csr"):
+                tag(_measure(lambda e=engine: shortest_paths(cg, 0, engine=e),
+                             log, repeats, extra))
+            if delta_profile(cg)["routable"]:
+                for j, dv in enumerate(_delta_candidates(cg, smoke)):
+                    # the first candidate is the profile's auto width;
+                    # model.best_delta only overrides it when an alt
+                    # wins by a real margin (noise-robust statics)
+                    kind = "auto" if j == 0 else "alt"
+                    tag(_measure(
+                        lambda d=dv: shortest_paths(
+                            cg, 0, engine="delta_stepping", delta=d),
+                        log, repeats, dict(extra, delta_kind=kind)))
+            for b in batches:
+                tag(_measure(
+                    lambda b=b: shortest_paths(
+                        cg, srcs[:b], engine="multisource_csr"),
+                    log, repeats, extra))
+            if mesh is not None:
+                for engine in ("frontier_sharded", "bellman_csr_sharded"):
+                    tag(_measure(
+                        lambda e=engine: shortest_paths(
+                            cg, 0, engine=e, mesh=mesh),
+                        log, repeats, extra))
+                for b in batches:
+                    tag(_measure(
+                        lambda b=b: shortest_paths(
+                            cg, srcs[:b], engine="multisource_csr_sharded",
+                            mesh=mesh),
+                        log, repeats, extra))
+    finally:
+        set_cost_log(prev)
+    return records
+
+
+def run(smoke: bool = False, repeats: int = 3, devices: int = 1,
+        out: str = DEFAULT_OUT, verbose: bool = True) -> str:
+    import jax
+
+    from repro.obs import backend_info
+
+    grid = SMOKE_GRID if smoke else FULL_GRID
+    t0 = time.time()
+    records = sweep(grid, repeats=repeats, devices=devices, smoke=smoke,
+                    verbose=verbose)
+    backend, device_kind = backend_info()
+    doc = {
+        "schema": CALIBRATION_SCHEMA,
+        "meta": {
+            "created_unix": int(time.time()),
+            "jax": jax.__version__,
+            "backend": backend,
+            "device_kind": device_kind,
+            "platform": platform.platform(),
+            "devices": devices,
+            "smoke": smoke,
+            "repeats": repeats,
+            "grid_points": len(grid),
+            "sweep_seconds": round(time.time() - t0, 1),
+        },
+        "records": records,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    if verbose:
+        print(f"\nwrote {len(records)} calibration records to {out} "
+              f"({doc['meta']['sweep_seconds']}s)")
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (< ~1 min on CPU)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--devices", type=int, default=_DEFAULT_DEVICES,
+                    help="mesh size for the sharded engines (forced host "
+                         "device count on CPU); 1 drops the sharded leg")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args()
+    run(args.smoke, repeats=args.repeats, devices=args.devices,
+        out=args.out)

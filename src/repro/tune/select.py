@@ -1,0 +1,161 @@
+"""Measured-model engine selection behind the one dispatch seam.
+
+``TunedPolicy`` is a drop-in :class:`~repro.serve.dispatch.DispatchPolicy`
+whose ``choose()`` consults a fitted :class:`~repro.tune.model.CostModel`
+instead of the hard-coded size thresholds — so both entry points that
+already route through the seam (``api.shortest_paths(engine="auto")``
+and ``MicroBatchScheduler``) become self-tuning by swapping the policy,
+nothing else:
+
+    from repro.tune import TunedPolicy, load_model
+    from repro.serve.dispatch import policy_override
+
+    policy = TunedPolicy(load_model("CALIBRATION.json"), nprocs=4)
+    with policy_override(policy):
+        res = shortest_paths(cg, 0, engine="auto")
+
+Selection compares the model's predicted wall time across the engines
+legal for the query kind and returns the argmin *with its statics*: the
+measured-best Δ for the Δ-stepping engine and the calibrated bucket
+ceiling B for batched solves ride the returned ``EngineChoice``
+(``via="model"``), so every caller's magic numbers resolve through this
+one place.
+
+Conservative fallback (the contract tests pin): the hard-coded
+threshold rules decide whenever
+
+- the graph is dynamic (overlays never shard and repair off-seam),
+- the graph is not CSR-backed (no cheap features),
+- the query point is outside the calibrated support of the incumbent
+  (the engine the threshold policy would pick) or the incumbent pair
+  has no fit at this shard arity — the model only overrides defaults
+  where it has measured both the default and an alternative.
+
+Every candidate engine is exact (bitwise-equal-to-serial is an engine
+family invariant, benchmarks/run_bench.py pins it), so selection can
+never change answers — only wall time.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.dispatch import DispatchPolicy, EngineChoice, serving_mesh
+from repro.tune.model import CostModel
+
+__all__ = ["TunedPolicy"]
+
+# engines the model may race per query kind, single-device family
+_SINGLE_CANDIDATES = {
+    "single": ("frontier", "bellman_csr", "delta_stepping"),
+    # the batched engine is the only one with the shared-gather source
+    # axis; p2p stays on frontier for the target= early exit
+    "batch": ("multisource_csr",),
+    "p2p": ("frontier",),
+}
+_SHARDED_CANDIDATES = {
+    "single": ("frontier_sharded", "bellman_csr_sharded"),
+    "batch": ("multisource_csr_sharded",),
+    "p2p": ("frontier_sharded",),
+}
+
+
+class TunedPolicy(DispatchPolicy):
+    """Threshold policy + fitted cost model; see module docstring.
+
+    ``model``: a fitted :class:`CostModel` (``tune.load_model(path)``).
+    The threshold knobs (``shard_threshold`` etc.) keep their defaults
+    and govern the fallback arm.  ``model_routed`` / ``fallback_routed``
+    count which arm decided each ``choose()`` call.
+    """
+
+    def __init__(self, model: CostModel, **kwargs):
+        super().__init__(**kwargs)
+        self.model = model
+        self.model_routed = 0
+        self.fallback_routed = 0
+
+    # -- feature extraction ------------------------------------------------
+
+    @staticmethod
+    def _csr_of(g):
+        """The underlying static CsrGraph of ``g`` (a CsrGraph itself, a
+        registry GraphHandle, or None for dense/dynamic inputs)."""
+        from repro.core.csr import CsrGraph
+
+        if isinstance(g, CsrGraph):
+            return g
+        cg = getattr(g, "cg", None)
+        return cg if isinstance(cg, CsrGraph) else None
+
+    # -- batched admission ceiling ----------------------------------------
+
+    def batch_cap(self, g) -> Optional[int]:
+        cg = self._csr_of(g)
+        if cg is None or getattr(g, "dyn", None) is not None:
+            return None
+        engine = ("multisource_csr_sharded"
+                  if self.would_shard(cg.n) else "multisource_csr")
+        nprocs = self.nprocs if engine.endswith("_sharded") else 1
+        if not self.model.in_support(engine, n=cg.n, m=cg.nnz,
+                                     nprocs=nprocs):
+            return None
+        return self.model.best_batch(n=cg.n, m=cg.nnz, engine=engine,
+                                     nprocs=nprocs)
+
+    # -- selection ---------------------------------------------------------
+
+    def _candidates(self, cg, kind: str) -> List[Tuple[str, int]]:
+        """(engine, nprocs) pairs legal for this kind on this graph."""
+        out = [(e, 1) for e in _SINGLE_CANDIDATES[kind]]
+        if "delta_stepping" in _SINGLE_CANDIDATES[kind]:
+            from repro.core.delta_stepping import delta_profile
+
+            if not delta_profile(cg)["routable"]:
+                out = [(e, p) for e, p in out if e != "delta_stepping"]
+        if self.nprocs > 1 and self.shard_threshold is not None:
+            out += [(e, self.nprocs) for e in _SHARDED_CANDIDATES[kind]]
+        return out
+
+    def choose(self, g, *, kind: str = "single") -> EngineChoice:
+        base = super().choose(g, kind=kind)
+        from repro.dynamic.overlay import DynamicGraph
+
+        dynamic = (isinstance(g, DynamicGraph)
+                   or getattr(g, "dyn", None) is not None)
+        cg = self._csr_of(g)
+        if dynamic or cg is None:
+            self.fallback_routed += 1
+            return base
+        from repro.tune.features import graph_features
+
+        feats = graph_features(cg)
+        n, m = feats["n"], feats["m"]
+        # conservative gate: the incumbent (threshold choice) must itself
+        # be fitted and in calibrated support, else fall back outright.
+        if not self.model.in_support(base.engine, n=n, m=m,
+                                     nprocs=base.nprocs):
+            self.fallback_routed += 1
+            return base
+        scored = []
+        for engine, nprocs in self._candidates(cg, kind):
+            if not self.model.in_support(engine, n=n, m=m, nprocs=nprocs):
+                continue
+            pred = self.model.predict(engine, n=n, m=m,
+                                      hops=feats["hops"],
+                                      skew=feats["skew"], nprocs=nprocs)
+            if pred is not None and np.isfinite(pred):
+                scored.append((float(pred), engine, nprocs))
+        if not scored:
+            self.fallback_routed += 1
+            return base
+        scored.sort()
+        _, engine, nprocs = scored[0]
+        self.model_routed += 1
+        mesh = serving_mesh(nprocs, self.axis) if nprocs > 1 else None
+        delta = (self.model.best_delta(engine, n=n, m=m, nprocs=nprocs)
+                 if engine == "delta_stepping" else None)
+        cap = (self.batch_cap(g) if kind == "batch" else None)
+        return EngineChoice(engine, mesh, self.axis, nprocs,
+                            delta=delta, batch_cap=cap, via="model")

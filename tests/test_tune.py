@@ -1,0 +1,342 @@
+"""Self-tuning subsystem contracts (repro/tune + its dispatch seam).
+
+Pins what ISSUE 10 introduced:
+
+- determinism: fitting twice from the same records and seed yields
+  byte-identical serialized models (lstsq + seeded bootstrap only);
+- conservative fallback: outside the calibrated support the TunedPolicy
+  defers to the hard-coded thresholds (``via="threshold"``), inside it
+  routes by predicted wall (``via="model"``) — and selection never
+  changes answers (bitwise-equal to serial either way);
+- statics plumbing: the Δ / chunk / batch-cap a policy returns on the
+  ``EngineChoice`` actually reach the scheduler's solves — admission is
+  throttled to the cap and ``sssp_frontier`` receives the statics;
+- replay gate: a clean log replays green, a perturbed (slowed) log
+  fails, out-of-support and unfitted records are skipped with reasons,
+  backend mismatches are refused, and the gate is one-sided by default;
+- policy seam: ``set_default_policy`` returns the previous policy and
+  ``policy_override`` restores it (exception path included);
+- v2 cost records: the shim auto-stamps backend/device_kind and the
+  validator accepts both v1- and v2-shaped records;
+- calibration: a micro sweep through the real api shim produces valid
+  records a model fits from end to end.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import csr as C
+from repro.core.api import shortest_paths
+from repro.obs import CostLog, set_cost_log
+from repro.obs.validate import validate_cost_records
+from repro.serve import DistanceCache, GraphRegistry, MicroBatchScheduler
+from repro.serve.dispatch import (DispatchPolicy, EngineChoice,
+                                  default_policy, policy_override,
+                                  set_default_policy)
+from repro.tune import TunedPolicy, fit_model, graph_features, replay_records
+from repro.tune.model import CostModel
+
+
+# ---------------------------------------------------------------------------
+# synthetic calibration records: noiseless power laws the fit recovers
+# exactly, with delta_stepping the cheapest engine by construction
+# ---------------------------------------------------------------------------
+
+def _rec(engine, n, m, wall_ms, *, batch=1, nprocs=1, delta=0.0,
+         corpus="sparse", hops=10.0, skew=2.0, converged=True,
+         delta_kind=None):
+    r = {"engine": engine, "graph": "t", "n": n, "m": m, "batch": batch,
+         "nprocs": nprocs, "delta": delta, "sweeps": 3,
+         "edges_relaxed": m, "wall_ms": wall_ms, "converged": converged,
+         "corpus": corpus, "hops": hops, "skew": skew,
+         "backend": "cpu", "device_kind": "cpu"}
+    if delta_kind:
+        r["delta_kind"] = delta_kind
+    return r
+
+
+def _synthetic_records():
+    """Grid n in {256..2048}, m = 3n: frontier ~ n/100 ms, bellman ~
+    n/50 ms, delta_stepping ~ n/1000 ms with two Δ candidates per point
+    (Δ=8 measured better than Δ=4)."""
+    recs = []
+    for n in (256, 512, 1024, 2048):
+        m = 3 * n
+        recs.append(_rec("frontier", n, m, n / 100.0))
+        recs.append(_rec("bellman_csr", n, m, n / 50.0))
+        recs.append(_rec("delta_stepping", n, m, n / 500.0, delta=4.0,
+                         delta_kind="auto"))
+        recs.append(_rec("delta_stepping", n, m, n / 1000.0, delta=8.0,
+                         delta_kind="alt"))
+        for b in (2, 4):
+            recs.append(_rec("multisource_csr", n, m, b * n / 150.0,
+                             batch=b))
+    return recs
+
+
+@pytest.fixture()
+def model():
+    return fit_model(_synthetic_records(), seed=0)
+
+
+# ---------------------------------------------------------------------------
+# model fitting
+# ---------------------------------------------------------------------------
+
+def test_fit_deterministic_under_fixed_seed():
+    recs = _synthetic_records()
+    a = fit_model(recs, seed=0, meta={"k": 1})
+    b = fit_model(list(recs), seed=0, meta={"k": 1})
+    assert a.to_json() == b.to_json()
+    # serialization roundtrip is also exact
+    assert CostModel.from_json(a.to_json()).to_json() == a.to_json()
+
+
+def test_fit_recovers_power_law_and_statics(model):
+    # noiseless data -> near-zero residual and accurate interpolation
+    fit = model.fit_for("frontier", 1)
+    assert fit is not None and fit.rms_log_err < 1e-6
+    pred = model.predict("frontier", n=1024, m=3072)
+    assert pred == pytest.approx(1024 / 100.0, rel=1e-3)
+    # delta fits collapse to the per-point best static and remember it
+    assert model.predict("delta_stepping", n=1024, m=3072) \
+        == pytest.approx(1024 / 1000.0, rel=1e-3)
+    assert model.best_delta("delta_stepping", n=1024, m=3072) == 8.0
+    # best_batch is the per-source argmin at the nearest point
+    assert model.best_batch(n=1024, m=3072) in (2, 4)
+
+
+def test_best_delta_keeps_auto_width_within_noise():
+    # the alt Δ "wins" by 5% — inside DELTA_WIN_MARGIN, so the graph-
+    # derived auto width is kept; a one-off noisy calibration point must
+    # not permanently bias the static
+    recs = []
+    for n in (256, 512, 1024):
+        m = 3 * n
+        recs.append(_rec("delta_stepping", n, m, 10.0, delta=4.0,
+                         delta_kind="auto"))
+        recs.append(_rec("delta_stepping", n, m, 9.5, delta=8.0,
+                         delta_kind="alt"))
+    mdl = fit_model(recs, seed=0)
+    assert mdl.best_delta("delta_stepping", n=512, m=1536) == 4.0
+
+
+def test_fit_skips_thin_groups_and_bad_records():
+    recs = [_rec("frontier", 256, 768, 1.0),
+            _rec("frontier", 512, 1536, 2.0),  # only 2 points: skipped
+            _rec("weird", 256, 768, 1.0, converged=False),
+            _rec("weird", 256, 768, 0.0)]      # zero wall: dropped
+    m = fit_model(recs, seed=0)
+    assert m.fit_for("frontier", 1) is None
+    assert m.fit_for("weird", 1) is None
+    assert m.meta["dropped_records"] == 2
+    assert any(s.startswith("frontier@P1") for s in m.meta["skipped_groups"])
+
+
+# ---------------------------------------------------------------------------
+# TunedPolicy selection + fallback
+# ---------------------------------------------------------------------------
+
+def test_tuned_policy_routes_by_model_inside_support(model):
+    cg = C.random_csr_graph(1024, 3072, seed=7)
+    pol = TunedPolicy(model, nprocs=1)
+    base = DispatchPolicy(nprocs=1).choose(cg, kind="single")
+    choice = pol.choose(cg, kind="single")
+    assert base.engine == "frontier" and base.via == "threshold"
+    assert choice.engine == "delta_stepping" and choice.via == "model"
+    assert choice.delta == 8.0          # measured-best static rides along
+    assert pol.model_routed == 1 and pol.fallback_routed == 0
+    # selection never changes answers
+    with policy_override(pol):
+        tuned = shortest_paths(cg, 0, engine="auto")
+    serial = shortest_paths(cg, 0, engine="serial")
+    assert np.array_equal(np.asarray(tuned.dist), np.asarray(serial.dist))
+
+
+def test_tuned_policy_falls_back_outside_support(model):
+    pol = TunedPolicy(model, nprocs=1)
+    tiny = C.random_csr_graph(50, 150, seed=3)      # n << support/margin
+    choice = pol.choose(tiny, kind="single")
+    assert choice.via == "threshold"
+    assert choice.engine == "frontier"              # the hard-coded rule
+    assert pol.fallback_routed == 1 and pol.model_routed == 0
+    # unfitted pair (no sharded fits in the synthetic model): an n large
+    # enough to shard falls back too, never guesses
+    pol4 = TunedPolicy(model, nprocs=1)
+    huge = C.random_csr_graph(8192, 24576, seed=4)  # above support * 2
+    assert pol4.choose(huge, kind="single").via == "threshold"
+
+
+def test_tuned_policy_dynamic_graph_falls_back(model):
+    from repro.dynamic.overlay import DynamicGraph
+
+    dyn = DynamicGraph(C.random_csr_graph(1024, 3072, seed=9))
+    pol = TunedPolicy(model, nprocs=1)
+    assert pol.choose(dyn, kind="single").via == "threshold"
+
+
+# ---------------------------------------------------------------------------
+# statics plumbing through the scheduler
+# ---------------------------------------------------------------------------
+
+class _StaticsPolicy(DispatchPolicy):
+    """Threshold policy that pins statics, standing in for a model."""
+
+    def batch_cap(self, g):
+        return 2
+
+    def choose(self, g, *, kind="single"):
+        base = super().choose(g, kind=kind)
+        if kind == "p2p" and base.nprocs == 1:
+            return EngineChoice(base.engine, None, base.axis, 1,
+                                delta=7.5, chunk=128, via="model")
+        return base
+
+
+def _stack(cg, policy, *, max_batch=8):
+    registry = GraphRegistry()
+    cache = DistanceCache(capacity=64)
+    sched = MicroBatchScheduler(registry, cache, max_batch=max_batch,
+                                dispatch=policy)
+    registry.register("g", cg)
+    return sched
+
+
+def test_scheduler_admission_respects_policy_batch_cap():
+    cg = C.random_csr_graph(256, 768, seed=5)
+    sched = _stack(cg, _StaticsPolicy(nprocs=1))
+    for s in (3, 9, 17, 33, 57):
+        sched.submit("g", s)
+    first = sched.tick()
+    assert len(first) == 2              # cap=2 < max_batch=8 throttles
+    rest = []
+    for _ in range(3):
+        rest += sched.tick()
+    assert len(first) + len(rest) == 5  # requeued queries drain
+    ref = shortest_paths(cg, 3, engine="serial").dist
+    got = next(a for a in first + rest if a.query.source == 3)
+    assert np.array_equal(np.asarray(got.value), np.asarray(ref))
+
+
+def test_scheduler_p2p_uses_choice_statics(monkeypatch):
+    import repro.serve.scheduler as sched_mod
+
+    seen = {}
+    real = sched_mod.sssp_frontier
+
+    def spy(*args, **kwargs):
+        seen.update(kwargs)
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(sched_mod, "sssp_frontier", spy)
+    cg = C.random_csr_graph(256, 768, seed=5)
+    sched = _stack(cg, _StaticsPolicy(nprocs=1))
+    sched.submit("g", 3, 77)
+    (ans,) = sched.tick()
+    assert seen.get("delta") == 7.5 and seen.get("chunk") == 128
+    ref = shortest_paths(cg, 3, engine="serial").dist[77]
+    assert np.float32(ans.value) == np.float32(ref)
+
+
+# ---------------------------------------------------------------------------
+# replay gate
+# ---------------------------------------------------------------------------
+
+def test_replay_clean_log_passes(model):
+    recs = _synthetic_records()
+    rep = replay_records(recs, model, tol=1.5)
+    assert rep["pass"] and rep["replayed"] > 0 and not rep["failures"]
+
+
+def test_replay_fails_on_perturbed_log(model):
+    recs = _synthetic_records()
+    slow = [dict(r, wall_ms=r["wall_ms"] * 10) for r in recs]
+    rep = replay_records(slow, model, tol=3.0)
+    assert not rep["pass"]
+    assert any(k.startswith("frontier@P1") for k in rep["failures"])
+
+
+def test_replay_one_sided_by_default(model):
+    fast = [dict(r, wall_ms=r["wall_ms"] / 10)
+            for r in _synthetic_records()]
+    assert replay_records(fast, model, tol=3.0)["pass"]
+    assert not replay_records(fast, model, tol=3.0, two_sided=True)["pass"]
+
+
+def test_replay_skips_uncovered_records_with_reasons(model):
+    recs = [_rec("frontier", 10 ** 6, 3 * 10 ** 6, 1.0),   # out of support
+            _rec("repair", 512, 1536, 1.0),                # unfitted
+            _rec("frontier", 512, 1536, 1.0, converged=False)]
+    rep = replay_records(recs, model, tol=3.0)
+    assert rep["replayed"] == 0 and not rep["pass"]
+    assert rep["skipped"]["out_of_support:frontier@P1"] == 1
+    assert rep["skipped"]["unfitted:repair@P1"] == 1
+    assert rep["skipped"]["not_converged"] == 1
+
+
+def test_replay_refuses_backend_mismatch(model):
+    recs = [dict(r, backend="tpu") for r in _synthetic_records()]
+    rep = replay_records(recs, model, tol=3.0, expect_backend="cpu")
+    assert rep["backend_mismatch"] == len(recs) and not rep["pass"]
+
+
+# ---------------------------------------------------------------------------
+# policy seam + v2 records + features
+# ---------------------------------------------------------------------------
+
+def test_set_default_policy_returns_previous_and_override_restores():
+    p1, p2 = DispatchPolicy(nprocs=1), DispatchPolicy(nprocs=1)
+    prev0 = set_default_policy(p1)
+    try:
+        assert default_policy() is p1
+        with policy_override(p2) as installed:
+            assert installed is p2 and default_policy() is p2
+        assert default_policy() is p1
+        with pytest.raises(RuntimeError):
+            with policy_override(p2):
+                assert default_policy() is p2
+                raise RuntimeError("boom")
+        assert default_policy() is p1           # restored on exception
+        assert set_default_policy(None) is p1   # returns the previous
+    finally:
+        set_default_policy(prev0)
+
+
+def test_cost_records_v2_backend_stamped_and_v1_still_valid():
+    cg = C.random_csr_graph(64, 192, seed=1)
+    log = CostLog()
+    prev = set_cost_log(log)
+    try:
+        shortest_paths(cg, 0, engine="frontier")
+    finally:
+        set_cost_log(prev)
+    rows = [r.to_dict() for r in log.records]
+    assert rows and rows[0]["backend"] and rows[0]["device_kind"]
+    assert validate_cost_records(rows) == []
+    v1 = [{k: v for k, v in r.items()
+           if k not in ("backend", "device_kind")} for r in rows]
+    assert validate_cost_records(v1) == []      # v1 shape still accepted
+    bad = [dict(rows[0], backend=123)]
+    assert validate_cost_records(bad) != []
+
+
+def test_graph_features_memoized_and_sane():
+    cg = C.random_csr_graph(256, 768, seed=11)
+    f1 = graph_features(cg)
+    assert f1["n"] == 256 and f1["m"] == cg.nnz
+    assert f1["hops"] >= 1 and f1["skew"] >= 1.0
+    assert graph_features(cg) is f1             # memoized on the graph
+
+
+def test_micro_calibration_sweep_fits_end_to_end():
+    from repro.tune.calibrate import sweep
+
+    records = sweep((("sparse", 64, 192),), repeats=1, devices=1,
+                    smoke=True, batches=(2,), verbose=False)
+    assert records and validate_cost_records(records) == []
+    assert all(r["corpus"] == "sparse" and r["hops"] >= 1 for r in records)
+    m = fit_model(records, min_records=1)
+    assert m.engines()                          # something fitted
+    for eng, p in m.engines():
+        assert m.predict(eng, n=64, m=192, nprocs=p) > 0
